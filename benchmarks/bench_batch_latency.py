@@ -1,0 +1,55 @@
+"""Paper Table 2: write latency mean/sigma vs submission batch size —
+8 workers bursting batches at a SINGLE SSD, offered load fixed below
+saturation. The 8 submitting cores are modeled as one 8x-faster
+submitter (the simulator has one virtual core)."""
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, NVMeSpec, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+from repro.core.costs import DEFAULT_COSTS
+
+
+def run():
+    section("batch size vs write latency (paper Table 2)")
+    costs8 = dataclasses.replace(
+        DEFAULT_COSTS, syscall=DEFAULT_COSTS.syscall // 8,
+        submit_floor_write=DEFAULT_COSTS.submit_floor_write // 8,
+        storage_stack=DEFAULT_COSTS.storage_stack // 8,
+        pin_copy=DEFAULT_COSTS.pin_copy // 8,
+        task_work=DEFAULT_COSTS.task_work // 8,
+        complete_irq=DEFAULT_COSTS.complete_irq // 8)
+    for batch in (1, 8, 32, 64, 128, 256):
+        tl = Timeline()
+        ring = IoUring(tl, sq_depth=4096, setup=SetupFlags.DEFER_TASKRUN,
+                       costs=costs8)
+        dev = SimNVMe(tl, NVMeSpec(n_ssds=1))
+        ring.register_device(3, dev)
+        lats = []
+        outstanding = 0
+        # 8 workers each issuing bursts of `batch` writes
+        for burst in range(16):
+            for w in range(8):
+                for i in range(batch):
+                    sqe = ring.get_sqe()
+                    while sqe is None:
+                        ring.submit()
+                        lats.append(ring.wait_cqe().latency)
+                        outstanding -= 1
+                        sqe = ring.get_sqe()
+                    R.prep_write(sqe, 3, bytearray(4096),
+                                 ((burst * 8 + w) * batch + i) * 4096,
+                                 4096)
+                    outstanding += 1
+            ring.submit()
+            for c in ring.wait_cqes(outstanding):
+                lats.append(c.latency)
+            outstanding = 0
+            # pace the offered load below saturation (paper: 1.5 MIOPS)
+            tl.run_until(tl.now + batch * 8 / 1.5e6)
+        arr = np.asarray(lats) * 1e6
+        emit(f"table2/batch={batch}/lat_us", round(float(arr.mean()), 2),
+             f"sigma={float(arr.std()):.2f}")

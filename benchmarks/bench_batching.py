@@ -1,0 +1,31 @@
+"""Paper §2.1 chart: CPU cycles/op vs submission batch size (~5-6x at 16)."""
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+
+
+def run():
+    section("batching: cycles/op vs batch size (paper §2.1)")
+    for op in ("nop", "read"):
+        base = None
+        for batch in (1, 2, 4, 8, 16, 32, 64):
+            tl = Timeline()
+            ring = IoUring(tl, setup=SetupFlags.DEFER_TASKRUN)
+            ring.register_device(3, SimNVMe(tl))
+            n = 256
+            for s in range(0, n, batch):
+                for i in range(batch):
+                    sqe = ring.get_sqe()
+                    if op == "nop":
+                        R.prep_nop(sqe)
+                    else:
+                        R.prep_read(sqe, 3, bytearray(4096),
+                                    (s + i) * 4096, 4096)
+                ring.submit()
+                ring.wait_cqes(batch)
+            cyc = ring.stats.cpu_seconds_app / n * 3.7e9
+            if base is None:
+                base = cyc
+            emit(f"batching/{op}/cycles_per_op/batch={batch}", round(cyc),
+                 f"speedup={base / cyc:.2f}x")

@@ -1,0 +1,44 @@
+"""Paper Fig. 8: single-thread throughput & cycles/byte vs block size,
+including the io_worker fallback cliffs (>512 KiB)."""
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+
+KiB = 1024
+
+
+def run():
+    section("block size sweep (paper Fig. 8)")
+    for write in (False, True):
+        op = "write" if write else "read"
+        for bs in (4 * KiB, 16 * KiB, 64 * KiB, 128 * KiB, 256 * KiB,
+                   512 * KiB, 1024 * KiB):
+            tl = Timeline()
+            ring = IoUring(tl, setup=SetupFlags.DEFER_TASKRUN |
+                           SetupFlags.IOPOLL)
+            ring.register_device(3, SimNVMe(tl))
+            n = max(8, (64 << 20) // bs)
+            depth = 16
+            done = 0
+            inflight = 0
+            i = 0
+            while done < n:
+                while inflight < depth and i < n:
+                    sqe = ring.get_sqe()
+                    if sqe is None:
+                        break
+                    f = R.prep_write if write else R.prep_read
+                    f(sqe, 3, bytearray(bs), i * bs, bs)
+                    sqe.cmd = "passthru"
+                    i += 1
+                    inflight += 1
+                ring.submit()
+                ring.wait_cqe()
+                done += 1
+                inflight -= 1
+            gib = n * bs / tl.now / 2**30
+            cpb = ring.stats.cpu_seconds_app * 3.7e9 / (n * bs)
+            emit(f"fig8/{op}/bs={bs//KiB}KiB/gib_s", round(gib, 1),
+                 f"cycles_per_byte={cpb:.3f} "
+                 f"workers={ring.stats.worker_fallbacks}")

@@ -1,0 +1,39 @@
+"""Paper Fig. 5: the YCSB design ladder, with the paper's own analytic
+model predictions printed next to each measurement (§3.2 methodology)."""
+
+from benchmarks.common import emit, section
+from repro.core.perfmodel import (CycleModel, LatencyModel, PAPER_C_TX,
+                                  PAPER_C_READ_BATCH, PAPER_C_READ_SINGLE,
+                                  PAPER_C_WRITE_BATCH)
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
+
+PAPER_TPS = {"posix": 16.5, "io_uring": 16.5, "+BatchEvict": 19.0,
+             "+Fibers": 183.0, "+BatchSubmit": 216.0, "+RegBufs": 238.0,
+             "+Passthru": 300.0, "+IOPoll": 376.0, "+SQPoll": 546.5}
+
+
+def run(n_txns: int = 2500):
+    section("buffer manager YCSB ladder (paper Fig. 5)")
+    fault = None
+    for cfg in EngineConfig.ladder():
+        cfg.pool_frames = 2048
+        eng = StorageEngine(cfg, n_tuples=200_000)
+        res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),
+                             n_txns)
+        fault = res["faults"] / max(1, res["faults"] + res["hits"]) * 3
+        # analytic predictions, exactly the paper's two models
+        if cfg.name in ("posix", "io_uring"):
+            model = LatencyModel(page_fault_rate=fault).tx_per_s()
+        elif cfg.name == "+BatchEvict":
+            model = LatencyModel(page_fault_rate=fault,
+                                 batch_evict=True).tx_per_s()
+        elif cfg.name == "+Fibers":
+            model = CycleModel(PAPER_C_TX, PAPER_C_READ_SINGLE +
+                               PAPER_C_WRITE_BATCH, fault).tx_per_s()
+        else:
+            model = CycleModel(PAPER_C_TX, PAPER_C_READ_BATCH +
+                               PAPER_C_WRITE_BATCH, fault).tx_per_s()
+        emit(f"fig5/{cfg.name}/tps", round(res["tps"]),
+             f"model={model/1e3:.1f}k paper={PAPER_TPS[cfg.name]}k "
+             f"fault={fault:.2f} batch_eff={res['batch_eff']:.1f}")

@@ -1,0 +1,46 @@
+"""Paper Fig. 9: durable-write paths — write+fsync (worker fallback),
+linked write->fsync, NVMe passthrough flush; consumer vs enterprise (PLP)
+SSDs."""
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, NVMeSpec, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+from repro.core.sqe import SqeFlags
+
+
+def _one(ring, tl, *, linked: bool, flush: bool):
+    t0 = tl.now
+    sqe = ring.get_sqe()
+    R.prep_write(sqe, 3, bytearray(4096), 0, 4096, user_data=1,
+                 flags=SqeFlags.IO_LINK if linked else SqeFlags.NONE)
+    if linked:
+        s2 = ring.get_sqe()
+        R.prep_fsync(s2, 3, user_data=2, nvme_flush=flush)
+        ring.submit()
+        ring.wait_cqes(2)
+    else:
+        ring.submit()
+        ring.wait_cqe()
+        s2 = ring.get_sqe()
+        R.prep_fsync(s2, 3, user_data=2, nvme_flush=flush)
+        ring.submit()
+        ring.wait_cqe()
+    return tl.now - t0
+
+
+def run():
+    section("durable writes (paper Fig. 9)")
+    for ssd, spec in [("consumer", NVMeSpec(plp=False, fsync_lat=1.2e-3)),
+                      ("enterprise", NVMeSpec(plp=True, fsync_lat=30e-6))]:
+        for mode, kw in [("write+fsync", dict(linked=False, flush=False)),
+                         ("linked write->fsync", dict(linked=True,
+                                                      flush=False)),
+                         ("passthru write+flush", dict(linked=False,
+                                                       flush=True))]:
+            tl = Timeline()
+            ring = IoUring(tl, setup=SetupFlags.DEFER_TASKRUN)
+            ring.register_device(3, SimNVMe(tl, spec))
+            lats = [_one(ring, tl, **kw) for _ in range(32)]
+            us = sum(lats) / len(lats) * 1e6
+            emit(f"fig9/{ssd}/{mode}/lat_us", round(us, 1),
+                 f"workers={ring.stats.worker_fallbacks}")

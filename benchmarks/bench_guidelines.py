@@ -1,0 +1,41 @@
+"""Paper Fig. 17 / §5.2: the guideline ladder applied to a "legacy
+engine" — PostgreSQL-like constraints: filesystem storage (no passthrough,
+no IOPoll on data), CoopTR instead of DeferTR (multi-process model), OS
+buffered reads. Applying GL(3)+(4) must yield the paper's ~11-15%."""
+
+from benchmarks.common import emit, section
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_read_txn
+
+
+def run(n_txns: int = 2500):
+    section("guideline ladder on a legacy engine (paper Fig. 17)")
+    # PostgreSQL-like baseline: async reads already (their io_uring AIO),
+    # but no registered buffers, no polling, filesystem in the path
+    ladder = [
+        ("pg-io_uring-base", EngineConfig(
+            "pg-base", n_fibers=64, batch_evict=True, adaptive_batch=True,
+            fixed_bufs=False, passthrough=False, iopoll=False,
+            sqpoll=False, pool_frames=2048)),
+        ("+FixedBufs (GL4)", EngineConfig(
+            "pg-fixed", n_fibers=64, batch_evict=True, adaptive_batch=True,
+            fixed_bufs=True, passthrough=False, iopoll=False,
+            sqpoll=False, pool_frames=2048)),
+        ("+IOPoll (GL4)", EngineConfig(
+            "pg-iopoll", n_fibers=64, batch_evict=True,
+            adaptive_batch=True, fixed_bufs=True, passthrough=False,
+            iopoll=True, sqpoll=False, pool_frames=2048)),
+        ("+SQPoll (GL3)", EngineConfig(
+            "pg-sqpoll", n_fibers=64, batch_evict=True,
+            adaptive_batch=True, fixed_bufs=True, passthrough=False,
+            iopoll=True, sqpoll=True, pool_frames=2048)),
+    ]
+    base_tps = None
+    for label, cfg in ladder:
+        eng = StorageEngine(cfg, n_tuples=200_000)
+        res = eng.run_fibers(lambda rng, e=eng: ycsb_read_txn(e, rng),
+                             n_txns)
+        if base_tps is None:
+            base_tps = res["tps"]
+        emit(f"fig17/{label}/tps", round(res["tps"]),
+             f"speedup={res['tps']/base_tps:.3f}x")

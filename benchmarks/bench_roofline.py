@@ -1,0 +1,35 @@
+"""Framework roofline: reads the dry-run JSON artifacts and prints the
+three-term roofline per (arch x shape x mesh) — the §Roofline source."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, section
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run():
+    section("roofline table from dry-run artifacts (EXPERIMENTS §Roofline)")
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/missing", 0, "run: python -m repro.launch.dryrun --all")
+        return
+    for fn in files:
+        with open(fn) as f:
+            r = json.load(f)
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") != "ok":
+            emit(f"roofline/{cell}/skipped", 0, r.get("status", "?"))
+            continue
+        if r.get("tag"):
+            continue                     # hillclimb variants listed in §Perf
+        t = r["roofline"]
+        emit(f"roofline/{cell}/bound_s", round(t["t_bound_s"], 4),
+             f"bottleneck={t['bottleneck']} "
+             f"comp={t['t_compute_s']:.3f} mem={t['t_memory_s']:.3f} "
+             f"coll={t['t_collective_s']:.3f} "
+             f"useful={r['useful_flops_frac']:.2f} "
+             f"hbm_gib={r['memory']['peak_est_bytes']/2**30:.1f}")

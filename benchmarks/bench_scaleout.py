@@ -1,0 +1,59 @@
+"""Paper Fig. 7: thread scale-out for random 4 KiB I/O, ring-per-thread.
+
+Each thread is an independent ring on its own core; aggregate IOPS =
+min(threads / cpu_per_op, device array limit). cpu_per_op is MEASURED from
+a single-ring run per configuration; the device limit comes from the
+NVMe spec (8 x 2.45M IOPS)."""
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, NVMeSpec, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+
+CONFIGS = [
+    ("libaio-like", dict(fixed=False, passthru=False, iopoll=False,
+                         extra_cycles=1500)),   # libaio per-op overhead
+    ("io_uring", dict(fixed=False, passthru=False, iopoll=False,
+                      extra_cycles=0)),
+    ("+RegBufs", dict(fixed=True, passthru=False, iopoll=False,
+                      extra_cycles=0)),
+    ("+Passthru", dict(fixed=True, passthru=True, iopoll=False,
+                       extra_cycles=0)),
+    ("+IOPoll", dict(fixed=True, passthru=True, iopoll=True,
+                     extra_cycles=0)),
+]
+
+
+def measure_cpu_per_op(fixed, passthru, iopoll, extra_cycles) -> float:
+    tl = Timeline()
+    setup = SetupFlags.DEFER_TASKRUN | (SetupFlags.IOPOLL if iopoll
+                                        else SetupFlags.NONE)
+    ring = IoUring(tl, setup=setup)
+    ring.register_device(3, SimNVMe(tl, filesystem=not passthru))
+    bufs = [bytearray(4096) for _ in range(32)]
+    ring.register_buffers(bufs)
+    n = 512
+    for s in range(0, n, 32):
+        for i in range(32):
+            sqe = ring.get_sqe()
+            if fixed:
+                R.prep_read_fixed(sqe, 3, i, (s + i) * 4096, 4096)
+            else:
+                R.prep_read(sqe, 3, bufs[i], (s + i) * 4096, 4096)
+            if passthru:
+                sqe.cmd = "passthru"
+        ring.submit()
+        ring.wait_cqes(32)
+    return (ring.stats.cpu_seconds_app + extra_cycles / 3.7e9 * n) / n
+
+
+def run():
+    section("thread scale-out, random 4 KiB reads (paper Fig. 7)")
+    spec = NVMeSpec()
+    dev_limit = spec.n_ssds * spec.iops_per_ssd
+    for name, kw in CONFIGS:
+        cpu = measure_cpu_per_op(**kw)
+        for threads in (1, 2, 4, 8, 16, 32):
+            iops = min(threads / cpu, dev_limit)
+            emit(f"fig7/{name}/threads={threads}/miops",
+                 round(iops / 1e6, 2),
+                 "device-bound" if iops >= dev_limit else "cpu-bound")

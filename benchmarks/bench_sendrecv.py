@@ -1,0 +1,122 @@
+"""Paper Fig. 15 (small-message latency) & Fig. 16 (per-byte cost vs
+message size, zero-copy thresholds), on a real ring + SimSocket pair."""
+
+from benchmarks.common import emit, section
+from repro.core import IoUring, SetupFlags, Timeline
+from repro.core.backends import NICSpec, SimNetwork, SimSocket
+from repro.core import ring as R
+from repro.core.sqe import SqeFlags
+
+
+def make_pair(setup):
+    tl = Timeline()
+    net = SimNetwork(tl, 2, NICSpec())
+    sa, sb = SimSocket.pair(net, 0, 1)
+    ra = IoUring(tl, setup=setup)
+    rb = IoUring(tl, setup=setup)
+    ra.register_device(4, sa)
+    rb.register_device(4, sb)
+    return tl, ra, rb
+
+
+def pingpong(setup, *, n=64, size=8, poll_first=False):
+    tl, ra, rb = make_pair(setup)
+    t0 = tl.now
+    for _ in range(n):
+        sqe = ra.get_sqe()
+        R.prep_send(sqe, 4, size, user_data=1)
+        ra.submit()
+        # peer receives then replies
+        sqe = rb.get_sqe()
+        R.prep_recv(sqe, 4, size, user_data=2,
+                    flags=SqeFlags.POLL_FIRST if poll_first
+                    else SqeFlags.NONE)
+        rb.submit()
+        rb.wait_cqe()
+        sqe = rb.get_sqe()
+        R.prep_send(sqe, 4, size, user_data=3)
+        rb.submit()
+        sqe = ra.get_sqe()
+        R.prep_recv(sqe, 4, size, user_data=4)
+        ra.submit()
+        ra.wait_cqe()
+    rtt = (tl.now - t0) / n
+    return rtt * 1e6, ra
+
+
+def run():
+    section("TCP-like ping-pong latency, 8 B (paper Fig. 15)")
+    for name, setup in [("DeferTR", SetupFlags.DEFER_TASKRUN),
+                        ("CoopTR", SetupFlags.COOP_TASKRUN),
+                        ("default", SetupFlags.NONE)]:
+        rtt, _ = pingpong(setup)
+        emit(f"fig15/{name}/rtt_us", round(rtt, 2), "")
+    rtt, ring = pingpong(SetupFlags.DEFER_TASKRUN, poll_first=True)
+    emit("fig15/DeferTR+PollFirst/rtt_us", round(rtt, 2),
+         "skips speculative inline attempt")
+    # paper §4.6: PollFirst cuts CPU cycles when the data is KNOWN not to
+    # be ready yet (RPC pattern: recv posted before the response exists)
+    cyc = {}
+    for pf in (False, True):
+        tl, ra, rb = make_pair(SetupFlags.DEFER_TASKRUN)
+        n = 64
+        for _ in range(n):
+            sqe = ra.get_sqe()
+            R.prep_recv(sqe, 4, 8, user_data=1,
+                        flags=SqeFlags.POLL_FIRST if pf
+                        else SqeFlags.NONE)
+            ra.submit()                    # speculative attempt wasted here
+            sqe = rb.get_sqe()
+            R.prep_send(sqe, 4, 8, user_data=2)
+            rb.submit()
+            ra.wait_cqe()
+        cyc[pf] = ra.stats.cpu_seconds_app
+    emit("fig15/PollFirst/recv_cpu_saving",
+         round(cyc[False] / max(cyc[True], 1e-12), 2),
+         "paper: up to 1.5x fewer kernel recv-path cycles")
+
+    section("per-byte recv cost vs message size (paper Fig. 16 right)")
+    for size in (64, 256, 1024, 4096, 16_384, 65_536):
+        rows = {}
+        for mode in ("single", "multishot", "zc"):
+            tl, ra, rb = make_pair(SetupFlags.DEFER_TASKRUN)
+            n = 32
+            # pre-send n messages from the peer
+            for _ in range(n):
+                sqe = rb.get_sqe()
+                R.prep_send(sqe, 4, size, user_data=9)
+            rb.submit()
+            if mode == "multishot":
+                sqe = ra.get_sqe()
+                R.prep_recv(sqe, 4, size, user_data=1,
+                            flags=SqeFlags.MULTISHOT)
+                ra.submit()
+                ra.wait_cqes(n)
+            else:
+                for _ in range(n):
+                    sqe = ra.get_sqe()
+                    R.prep_recv(sqe, 4, size, user_data=1,
+                                zero_copy=(mode == "zc"))
+                    ra.submit()
+                    ra.wait_cqe()
+            rows[mode] = ra.stats.cpu_seconds_app * 3.7e9 / (n * size)
+        best = min(rows, key=rows.get)
+        for mode, cpb in rows.items():
+            emit(f"fig16/recv/{mode}/size={size}/cycles_per_byte",
+                 round(cpb, 4), "best" if mode == best else "")
+
+    section("per-byte send cost vs message size (paper Fig. 16)")
+    for size in (64, 256, 1024, 4096, 16_384, 262_144, 1 << 20):
+        for zc in (False, True):
+            tl, ra, rb = make_pair(SetupFlags.DEFER_TASKRUN)
+            n = 32
+            for _ in range(n):
+                sqe = ra.get_sqe()
+                R.prep_send(sqe, 4, size, user_data=1, zero_copy=zc)
+                ra.submit()
+                ra.wait_cqe()
+            cpb = ra.stats.cpu_seconds_app * 3.7e9 / (n * size)
+            label = "zc" if zc else "copy"
+            emit(f"fig16/send/{label}/size={size}/cycles_per_byte",
+                 round(cpb, 4),
+                 "zc wins" if zc and size > 1024 else "")

@@ -1,0 +1,57 @@
+"""Paper Fig. 11 (egress vs workers/tuple size), Fig. 12 (memory
+bandwidth), Fig. 13 (speedup vs epoll), Fig. 14 (network tuning)."""
+
+from benchmarks.common import emit, section
+from repro.shuffle import ShuffleConfig, ShuffleSim
+
+MiB = 1 << 20
+
+
+def run(total=192 * MiB):
+    section("shuffle egress (paper Fig. 11)")
+    for ts in (64, 512, 4096):
+        for nw in (8, 16, 32):
+            for zc_s, zc_r, label in [(False, False, "default"),
+                                      (True, False, "+zc_send"),
+                                      (True, True, "+zc_recv")]:
+                r = ShuffleSim(ShuffleConfig(
+                    tuple_size=ts, n_workers=nw, zc_send=zc_s,
+                    zc_recv=zc_r, total_bytes_per_node=total)).run()
+                emit(f"fig11/tuple={ts}/w={nw}/{label}/gib_s",
+                     round(r["egress_gib_per_node"], 1),
+                     f"gbit={r['egress_gbit_per_node']:.0f}")
+
+    section("shuffle memory bandwidth (paper Fig. 12)")
+    for ts in (64, 4096):
+        for zc, label in [((False, False), "default"),
+                          ((True, True), "zero-copy")]:
+            r = ShuffleSim(ShuffleConfig(
+                tuple_size=ts, n_workers=32, zc_send=zc[0], zc_recv=zc[1],
+                total_bytes_per_node=total)).run()
+            emit(f"fig12/tuple={ts}/{label}/mem_gib_s",
+                 round(r["mem_gib_s"], 1),
+                 f"per_net_byte={r['mem_per_net_byte']:.2f}")
+
+    section("shuffle vs epoll (paper Fig. 13)")
+    for ts in (64, 512, 4096):
+        base = ShuffleSim(ShuffleConfig(tuple_size=ts, n_workers=16,
+                                        iface="epoll",
+                                        total_bytes_per_node=total)).run()
+        for zc_s, zc_r, label in [(False, False, "uring"),
+                                  (True, False, "uring+zc_send"),
+                                  (True, True, "uring+zc_recv")]:
+            r = ShuffleSim(ShuffleConfig(
+                tuple_size=ts, n_workers=16, zc_send=zc_s, zc_recv=zc_r,
+                total_bytes_per_node=total)).run()
+            sp = (r["egress_gib_per_node"] / base["egress_gib_per_node"])
+            emit(f"fig13/tuple={ts}/{label}/speedup", round(sp, 2),
+                 f"epoll={base['egress_gib_per_node']:.1f}gib")
+
+    section("network stack tuning (paper Fig. 14)")
+    for tuned in (False, True):
+        r = ShuffleSim(ShuffleConfig(
+            n_nodes=2, n_workers=8, tuple_size=4096, build_probe_table=False,
+            zc_send=True, zc_recv=True, tuned_network=tuned,
+            total_bytes_per_node=total)).run()
+        emit(f"fig14/tuned={tuned}/runtime_s",
+             round(r["duration_s"], 3), "")

@@ -1,0 +1,22 @@
+"""Paper Fig. 6: TPC-C in-memory (1 WH) vs out-of-memory (many WH);
+blocking-read baseline (vmcache-style) vs the asynchronous engine."""
+
+from benchmarks.common import emit, section
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import TPCCLite
+
+
+def run(n_txns: int = 1200):
+    section("TPC-C (paper Fig. 6)")
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    for W in (1, 20):
+        for name in ("posix", "+BatchSubmit", "+IOPoll"):
+            cfg = ladder[name]
+            cfg.pool_frames = 4096
+            n_rows = W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
+            eng = StorageEngine(cfg, n_tuples=n_rows + 100)
+            tp = TPCCLite(eng, W)
+            res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
+            fault = res["faults"] / max(1, res["faults"] + res["hits"])
+            emit(f"fig6/W={W}/{name}/tps", round(res["tps"]),
+                 f"fault={fault:.3f} restarts={eng.tree.restarts}")

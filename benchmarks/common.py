@@ -1,0 +1,14 @@
+"""Shared helpers: CSV row emission in `name,value,derived` format."""
+
+from __future__ import annotations
+
+ROWS = []
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def section(title: str) -> None:
+    print(f"# --- {title} ---", flush=True)

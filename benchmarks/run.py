@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (plus section comments).
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig5,fig11]
+"""
+
+import argparse
+import time
+
+
+MODULES = [
+    ("batching", "benchmarks.bench_batching"),
+    ("fig5", "benchmarks.bench_buffer_manager"),
+    ("fig6", "benchmarks.bench_tpcc"),
+    ("table2", "benchmarks.bench_batch_latency"),
+    ("fig7", "benchmarks.bench_scaleout"),
+    ("fig8", "benchmarks.bench_blocksize"),
+    ("fig9", "benchmarks.bench_durable"),
+    ("fig11-14", "benchmarks.bench_shuffle"),
+    ("fig15-16", "benchmarks.bench_sendrecv"),
+    ("fig17", "benchmarks.bench_guidelines"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module keys to run")
+    args = ap.parse_args()
+    only = set(k for k in args.only.split(",") if k)
+
+    import importlib
+    t00 = time.time()
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(modname)
+        mod.run()
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t00:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

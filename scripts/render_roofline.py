@@ -1,0 +1,37 @@
+"""Render the §Roofline markdown table from experiments/dryrun/*.json."""
+
+import glob
+import json
+import sys
+
+rows = []
+skips = []
+for fn in sorted(glob.glob("experiments/dryrun/*.json")):
+    r = json.load(open(fn))
+    if "skipped" in r.get("status", ""):
+        if r["mesh"] == "16x16":
+            skips.append((r["arch"], r["shape"], r["status"]))
+        continue
+    if r["mesh"] != "16x16":
+        continue
+    t = r["roofline"]
+    mf = r["model_flops_per_chip"]
+    frac = mf / 197e12 / t["t_bound_s"] if t["t_bound_s"] > 0 else 0.0
+    rows.append({
+        "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+        "tc": t["t_compute_s"], "tm": t["t_memory_s"],
+        "tl": t["t_collective_s"], "b": t["bottleneck"],
+        "frac": frac, "useful": r["useful_flops_frac"],
+        "gib": r["memory"]["peak_est_bytes"] / 2**30,
+    })
+
+print("| arch | shape | compute s | memory s | collective s | bottleneck "
+      "| roofline frac | useful FLOPs | HBM GiB |")
+print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+    print(f"| {r['arch']} | {r['shape']} | {r['tc']:.3f} | {r['tm']:.3f} "
+          f"| {r['tl']:.3f} | {r['b']} | {100*r['frac']:.1f}% "
+          f"| {100*r['useful']:.0f}% | {r['gib']:.1f} |")
+print()
+for a, s, why in skips:
+    print(f"- `{a}` × `{s}`: **{why}**")

@@ -1,0 +1,52 @@
+"""Fast sanity loop over all smoke configs: forward + decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config, list_archs, SHAPES
+from repro.models import lm
+
+B, S = 2, 64
+
+ok = True
+for arch in list_archs():
+    cfg = get_smoke_config(arch)
+    try:
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(cfg, key)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                                jnp.bfloat16)
+            p1 = jnp.arange(S)[None].repeat(B, 0)
+            batch["pos3"] = jnp.stack([p1, p1, p1])
+        elif cfg.family == "audio":
+            batch["tokens"] = jax.random.randint(
+                key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+        else:
+            batch["tokens"] = jax.random.randint(key, (B, S), 0,
+                                                 cfg.vocab_size)
+        logits, aux, cache = lm.forward(cfg, params, batch)
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any()), "NaN"
+        # decode 3 steps
+        dcache = lm.init_cache(cfg, max_len=S, batch=B)
+        if cfg.family == "audio":
+            tok = jnp.zeros((B, 1, cfg.n_codebooks), jnp.int32)
+        else:
+            tok = jnp.zeros((B, 1), jnp.int32)
+        step = jax.jit(lambda p, c, t, i: lm.decode_step(cfg, p, c, t, i))
+        for i in range(3):
+            lg, dcache = step(params, dcache, tok, jnp.int32(i))
+        assert not bool(jnp.isnan(lg.astype(jnp.float32)).any()), "NaN decode"
+        print(f"PASS {arch:24s} params={n:,} logits={logits.shape} "
+              f"decode={lg.shape}")
+    except Exception as e:  # noqa
+        ok = False
+        import traceback
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=8)
+
+sys.exit(0 if ok else 1)

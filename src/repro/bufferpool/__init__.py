@@ -1,0 +1,1 @@
+from repro.bufferpool.pool import BufferPool, PoolConfig

@@ -1,0 +1,237 @@
+"""Buffer-managed storage engine core (paper §3.1).
+
+Clock-sweep replacement, fix/unfix pin semantics, and the paper's
+step-wise design ladder as configuration:
+
+  PoolConfig(batch_evict=False, ...)    Posix/naive-io_uring baseline
+  +batch_evict      batched eviction writes, one submission   (§3.3.1)
+  (+fibers: run fix() inside a FiberScheduler with >1 fiber)  (§3.3.2)
+  +fixed_bufs       registered buffers (zero pin/copy)        (§3.4.1)
+  +passthrough      NVMe passthrough URING_CMD                (§3.4.1)
+  (+IOPoll/+SQPoll: ring setup flags)                         (§3.4.1)
+
+``fix``/``unfix`` are generators — they run inside fibers and yield
+IoRequests; with a single fiber and EagerSubmit the behaviour degenerates
+to the synchronous baseline exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Generator, List, Optional
+
+from repro.core import IoRequest
+from repro.core.ring import (prep_read, prep_read_fixed, prep_write,
+                             prep_write_fixed)
+
+PAGE = 4096
+
+
+@dataclass
+class PoolConfig:
+    n_frames: int = 1024
+    page_size: int = PAGE
+    batch_evict: bool = True
+    evict_batch: int = 16
+    fixed_bufs: bool = True          # registered buffers
+    passthrough: bool = False        # NVMe passthrough (no filesystem)
+    fd: int = 3
+
+
+@dataclass
+class Frame:
+    pid: int = -1
+    dirty: bool = False
+    ref: bool = False
+    pins: int = 0
+    loading: bool = False
+
+
+class BufferPool:
+    def __init__(self, ring, cfg: PoolConfig):
+        self.ring = ring
+        self.cfg = cfg
+        ps = cfg.page_size
+        self.frames: List[bytearray] = [bytearray(ps)
+                                        for _ in range(cfg.n_frames)]
+        if cfg.fixed_bufs:
+            ring.register_buffers(self.frames)
+        self.meta = [Frame() for _ in range(cfg.n_frames)]
+        self.table: Dict[int, int] = {}
+        self.loading_pids: set = set()   # fault in progress (no frame yet)
+        self.hand = 0
+        self.free: List[int] = list(range(cfg.n_frames))
+        # stats
+        self.hits = 0
+        self.faults = 0
+        self.evictions = 0
+        self.writebacks = 0
+
+    # ------------------------------------------------------------------
+
+    def fix(self, pid: int) -> Generator:
+        """Fiber-style: ``frame_idx = yield from pool.fix(pid)``.
+
+        Single-load invariant: a faulting pid is registered in
+        ``loading_pids`` BEFORE the (yielding) frame allocation, so a
+        concurrent fix() of the same page waits instead of double-loading
+        it into a second frame (whose eviction would then orphan the
+        live table entry)."""
+        while True:
+            idx = self.table.get(pid)
+            if idx is not None:
+                m = self.meta[idx]
+                # another fiber is loading this page: wait cooperatively
+                while m.loading and self.table.get(pid) == idx:
+                    yield None
+                if self.table.get(pid) == idx and m.pid == pid:
+                    m.ref = True
+                    m.pins += 1
+                    self.hits += 1
+                    return idx
+                continue                 # evicted while waiting: re-check
+            if pid in self.loading_pids:
+                yield None               # another fiber owns this fault
+                continue
+            break
+        self.faults += 1
+        self.loading_pids.add(pid)
+        try:
+            idx = yield from self._allocate()
+        except BaseException:
+            self.loading_pids.discard(pid)
+            raise
+        m = self.meta[idx]
+        m.pid = pid
+        m.dirty = False
+        m.ref = True
+        m.pins = 1
+        m.loading = True
+        self.table[pid] = idx
+        self.loading_pids.discard(pid)
+        cfg = self.cfg
+        off = pid * cfg.page_size
+
+        def prep(sqe, ud, idx=idx, off=off):
+            if cfg.fixed_bufs:
+                prep_read_fixed(sqe, cfg.fd, idx, off, cfg.page_size)
+            else:
+                prep_read(sqe, cfg.fd, memoryview(self.frames[idx]), off,
+                          cfg.page_size)
+            if cfg.passthrough:   # URING_CMD: bypass the storage stack
+                sqe.cmd = "passthru"
+        cqe = yield IoRequest(prep)
+        assert cqe.res == cfg.page_size, f"short read {cqe.res}"
+        m.loading = False
+        return idx
+
+    def unfix(self, idx: int, dirty: bool = False) -> None:
+        m = self.meta[idx]
+        m.pins -= 1
+        assert m.pins >= 0
+        if dirty:
+            m.dirty = True
+
+    def page(self, idx: int) -> bytearray:
+        return self.frames[idx]
+
+    def adopt_new_page(self, pid: int) -> int:
+        """Allocate a frame for a brand-new page (B-tree split) WITHOUT
+        yielding: uses a free frame or steals a clean unpinned victim.
+        New pages reach disk through normal dirty eviction."""
+        idx = self.free.pop() if self.free else self._steal_clean()
+        m = self.meta[idx]
+        m.pid = pid
+        m.dirty = True
+        m.ref = True
+        m.pins = 1
+        m.loading = False
+        self.table[pid] = idx
+        self.frames[idx][:] = bytes(self.cfg.page_size)
+        return idx
+
+    def unfix_new(self, idx: int) -> None:
+        self.unfix(idx, dirty=True)
+
+    def _steal_clean(self) -> int:
+        n = self.cfg.n_frames
+        for _ in range(2 * n):
+            i = self.hand
+            m = self.meta[i]
+            self.hand = (self.hand + 1) % n
+            if m.pins == 0 and not m.dirty and not m.loading and m.pid >= 0:
+                self.table.pop(m.pid, None)
+                self.evictions += 1
+                return i
+        raise RuntimeError("no clean frame available for a new page")
+
+    # ------------------------------------------------------------------
+
+    def _allocate(self) -> Generator:
+        if self.free:
+            return self.free.pop()
+        victims = self._clock_sweep()
+        while not victims:          # everything pinned/loading: wait
+            yield None
+            if self.free:
+                return self.free.pop()
+            victims = self._clock_sweep()
+        # reserve immediately: drop from the table and mark loading so no
+        # concurrent fiber can pin (or steal) a frame whose writeback is
+        # still in flight
+        for i in victims:
+            self.table.pop(self.meta[i].pid, None)
+            self.meta[i].loading = True
+        dirty = [i for i in victims if self.meta[i].dirty]
+        if dirty:
+            self.writebacks += len(dirty)
+            reqs = [self._write_req(i) for i in dirty]
+            if self.cfg.batch_evict:
+                yield reqs                       # ONE submission, N writes
+            else:
+                for r in reqs:                   # naive: one at a time
+                    yield r
+            for i in dirty:
+                self.meta[i].dirty = False
+        for i in victims:
+            self.evictions += 1
+            self.meta[i].pid = -1
+            self.meta[i].loading = False
+            self.free.append(i)
+        return self.free.pop()
+
+    def _clock_sweep(self) -> List[int]:
+        """Second-chance sweep collecting up to evict_batch victims (one
+        when batch_evict is off)."""
+        want = self.cfg.evict_batch if self.cfg.batch_evict else 1
+        out: List[int] = []
+        spins = 0
+        n = self.cfg.n_frames
+        while len(out) < want and spins < 4 * n:
+            m = self.meta[self.hand]
+            i = self.hand
+            self.hand = (self.hand + 1) % n
+            spins += 1
+            if m.pins > 0 or m.pid < 0 or m.loading:
+                continue
+            if m.ref:
+                m.ref = False                   # first pass: unmark
+                continue
+            if i in out:                        # hand wrapped: no dups
+                continue
+            out.append(i)
+        return out
+
+    def _write_req(self, idx: int) -> IoRequest:
+        cfg = self.cfg
+        off = self.meta[idx].pid * cfg.page_size
+
+        def prep(sqe, ud, idx=idx, off=off):
+            if cfg.fixed_bufs:
+                prep_write_fixed(sqe, cfg.fd, idx, off, cfg.page_size)
+            else:
+                prep_write(sqe, cfg.fd, memoryview(self.frames[idx]), off,
+                           cfg.page_size)
+            if cfg.passthrough:
+                sqe.cmd = "passthru"
+        return IoRequest(prep)

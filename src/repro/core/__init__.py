@@ -1,0 +1,21 @@
+"""The paper's contribution, adapted: an io_uring-style asynchronous I/O
+runtime — SQ/CQ rings over a discrete-event kernel/device model, fibers,
+adaptive batching, registered buffers, and the three execution paths of
+paper Fig. 3. Consumed by the buffer-managed storage engine (paper §3),
+the shuffle engine (§4), and the framework's own data pipeline and
+checkpointing substrates.
+"""
+
+from repro.core.adaptive import AdaptiveBatcher, EagerSubmit, FixedBatch
+from repro.core.backends import (FileBackend, NICSpec, NVMeSpec, SimNVMe,
+                                 SimNetwork, SimSocket)
+from repro.core.clock import CpuTimer, RealClock, VirtualClock
+from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.fibers import Fiber, FiberScheduler, IoRequest
+from repro.core.ring import (IoUring, prep_fsync, prep_nop, prep_read,
+                             prep_read_fixed, prep_recv, prep_send,
+                             prep_timeout, prep_uring_cmd, prep_write,
+                             prep_write_fixed)
+from repro.core.sqe import (CQE, SQE, CqeFlags, Op, RingStats, SetupFlags,
+                            SqeFlags)
+from repro.core.timeline import Timeline

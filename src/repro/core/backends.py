@@ -1,0 +1,227 @@
+"""Device backends for the ring runtime.
+
+``SimNVMe`` / ``SimNIC`` model the paper's hardware (Kioxia CM7-R array,
+ConnectX-7 400G) with the latency/bandwidth constants the paper measures;
+``FileBackend`` does real file I/O (used by the framework's own data
+pipeline and checkpointing with a RealClock ring).
+
+A backend's ``submit`` classifies each op onto one of the paper's three
+execution paths (Fig. 3):
+  ("inline", result)              — completed during submission
+  ("async", completion_time, res) — poll-set / device completion
+  ("worker", device_time, res)    — blocking fallback via io_worker
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.sqe import SQE, Op, SqeFlags, EAGAIN, EINVAL
+
+KiB = 1024
+MiB = 1024 * KiB
+
+
+# ---------------------------------------------------------------------------
+# Simulated NVMe SSD array (paper §3, Table 1/2, Fig. 7/8)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NVMeSpec:
+    read_lat: float = 70e-6          # 4 KiB random read (Table 1)
+    write_lat: float = 12e-6         # 4 KiB random write (Table 1)
+    n_ssds: int = 8
+    iops_per_ssd: float = 2.45e6     # Kioxia CM7-R
+    read_bw: float = 11.5e9          # B/s per SSD  (array ~90 GiB/s reads)
+    write_bw: float = 6.4e9          # B/s per SSD  (array ~50 GiB/s writes)
+    # worker-fallback cliffs (paper Fig. 8)
+    max_hw_sectors: int = 512 * KiB  # DMA limit (128 KiB w/ IOMMU)
+    max_segments_bytes: int = 512 * KiB
+    nr_requests: int = 1023
+    fsync_lat: float = 1e-3          # consumer SSD; enterprise (PLP): ~5 µs
+    plp: bool = True                 # enterprise: writes durable on arrival
+    flush_lat: float = 5e-6          # NVMe flush w/ PLP
+
+
+class SimNVMe:
+    """An SSD array. Completion time = queue-aware latency model: each SSD
+    services ops at iops rate; bursts grow the queue and the latency tail
+    (reproduces Table 2)."""
+
+    kind = "nvme"
+
+    def __init__(self, timeline, spec: NVMeSpec = NVMeSpec(), *,
+                 o_direct: bool = True, filesystem: bool = False):
+        self.tl = timeline
+        self.spec = spec
+        self.o_direct = o_direct
+        self.filesystem = filesystem   # blocks passthrough/IOPoll (GL4)
+        self._next_free = [0.0] * spec.n_ssds
+        self._rr = 0
+        self.inflight = 0
+
+    def supports_iopoll(self) -> bool:
+        return self.o_direct and not self.filesystem
+
+    def supports_passthrough(self) -> bool:
+        return not self.filesystem
+
+    def _ssd_for(self, offset: int) -> int:
+        return (offset // (4 * KiB)) % self.spec.n_ssds
+
+    # content hooks (timing-only by default; SimDisk stores real bytes)
+    def content_read(self, offset: int, buf, length: int) -> None:
+        pass
+
+    def content_write(self, offset: int, buf, length: int) -> None:
+        pass
+
+    def service(self, sqe: SQE) -> Tuple[str, float, int]:
+        sp = self.spec
+        n = max(1, sqe.length)
+        write = sqe.op in (Op.WRITEV, Op.WRITE_FIXED)
+        if sqe.op == Op.FSYNC:
+            lat = sp.flush_lat if (sp.plp and sqe.cmd == "nvme-flush") \
+                else sp.fsync_lat
+            return ("worker" if sqe.cmd != "nvme-flush" else "async",
+                    lat, 0)
+        # worker-fallback cliffs (Fig. 8)
+        if n > sp.max_hw_sectors or n > sp.max_segments_bytes:
+            path = "worker"
+        elif self.o_direct and self.inflight >= sp.nr_requests:
+            path = "worker"
+        else:
+            path = "async"
+        ssd = self._ssd_for(sqe.offset)
+        base = sp.write_lat if write else sp.read_lat
+        bw = sp.write_bw if write else sp.read_bw
+        xfer = n / bw
+        svc = 1.0 / sp.iops_per_ssd
+        t0 = max(self.tl.now, self._next_free[ssd])
+        self._next_free[ssd] = t0 + max(svc, xfer)
+        done = t0 + base + xfer
+        return (path, done - self.tl.now, n)
+
+
+class SimDisk(SimNVMe):
+    """SimNVMe + an in-memory disk image, so the storage engine reads and
+    writes REAL bytes (the B-tree lives on this "device") while timing
+    follows the NVMe model."""
+
+    def __init__(self, timeline, capacity: int,
+                 spec: NVMeSpec = NVMeSpec(), **kw):
+        super().__init__(timeline, spec, **kw)
+        self.image = bytearray(capacity)
+
+    def content_read(self, offset: int, buf, length: int) -> None:
+        if buf is not None:
+            buf[:length] = self.image[offset:offset + length]
+
+    def content_write(self, offset: int, buf, length: int) -> None:
+        if buf is not None:
+            self.image[offset:offset + length] = bytes(buf[:length])
+
+
+# ---------------------------------------------------------------------------
+# Simulated NIC / network (paper §4, Fig. 11–16)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NICSpec:
+    bw: float = 50e9                 # 400 Gbit/s = 50 GB/s each direction
+    base_lat: float = 9e-6           # one-way small-message latency
+    zc_send_threshold: int = 1 * KiB  # below: zero-copy loses (Fig. 16)
+    zc_recv_threshold: int = 1 * KiB
+
+
+class SimNetwork:
+    """A cluster of nodes with full-duplex links; ``SimSocket`` endpoints
+    are created in connected pairs. Per-direction link bandwidth is
+    enforced with next-free-time pacing (bisection bandwidth = n×2×bw)."""
+
+    def __init__(self, timeline, n_nodes: int, spec: NICSpec = NICSpec()):
+        self.tl = timeline
+        self.spec = spec
+        self.tx_free = [0.0] * n_nodes
+        self.rx_free = [0.0] * n_nodes
+
+    def xfer_time(self, src: int, dst: int, nbytes: int) -> float:
+        sp = self.spec
+        t0 = max(self.tl.now, self.tx_free[src], self.rx_free[dst])
+        dt = nbytes / sp.bw
+        self.tx_free[src] = t0 + dt
+        self.rx_free[dst] = t0 + dt
+        return (t0 + dt + sp.base_lat) - self.tl.now
+
+
+class SimSocket:
+    """One endpoint of a connected pair over a SimNetwork."""
+
+    kind = "socket"
+
+    def __init__(self, net: SimNetwork, node: int, peer_node: int):
+        self.net = net
+        self.node = node
+        self.peer_node = peer_node
+        self.peer: Optional["SimSocket"] = None
+        self.rx_queue: list = []          # (arrival_time, nbytes)
+        self.rx_waiters: list = []
+
+    @staticmethod
+    def pair(net: SimNetwork, a: int, b: int):
+        sa, sb = SimSocket(net, a, b), SimSocket(net, b, a)
+        sa.peer, sb.peer = sb, sa
+        return sa, sb
+
+    def service_send(self, nbytes: int) -> float:
+        """Returns completion delay; schedules delivery at the peer."""
+        dt = self.net.xfer_time(self.node, self.peer_node, nbytes)
+        peer = self.peer
+        arrive = self.net.tl.now + dt
+
+        def deliver():
+            peer.rx_queue.append(nbytes)
+            for w in peer.rx_waiters[:]:
+                w()
+        self.net.tl.at(arrive, deliver)
+        # send completes when the NIC has DMA'd the buffer (tx side)
+        return nbytes / self.net.spec.bw
+
+    def try_recv(self) -> Optional[int]:
+        if self.rx_queue:
+            return self.rx_queue.pop(0)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Real file backend (RealClock rings: data pipeline / checkpointing)
+# ---------------------------------------------------------------------------
+
+class FileBackend:
+    """Real pread/pwrite/fsync against the filesystem. With a virtual-clock
+    ring this still works (the op executes immediately; only CPU cost is
+    modeled), which keeps unit tests hermetic and fast."""
+
+    kind = "file"
+
+    def __init__(self, path: str, *, create: bool = False):
+        flags = os.O_RDWR | (os.O_CREAT if create else 0)
+        self.fd = os.open(path, flags, 0o644)
+        self.path = path
+
+    def close(self):
+        os.close(self.fd)
+
+    def pread(self, buf: memoryview, offset: int, length: int) -> int:
+        data = os.pread(self.fd, length, offset)
+        buf[:len(data)] = data
+        return len(data)
+
+    def pwrite(self, buf, offset: int, length: int) -> int:
+        return os.pwrite(self.fd, bytes(buf[:length]), offset)
+
+    def fsync(self) -> int:
+        os.fsync(self.fd)
+        return 0

@@ -1,0 +1,53 @@
+"""CPU cost model for the simulated kernel I/O path.
+
+Constants are cycles on the paper's 3.7 GHz AMD machine, derived from
+Table 1 and the §2.1 batching chart:
+
+  single read  10 200 clk   = syscall + kernel-submit floor
+  batch  read   5 400 clk   = floor + syscall/16
+  batch  write  5 700 clk
+
+Solving: syscall ≈ 5 120 clk, read floor ≈ 5 080, write floor ≈ 5 380.
+Tuning features subtract measured deltas (§3.4.1): registered buffers
+(-11% tx/s ⇒ ~700 clk/op pin+copy), NVMe passthrough (-20% ⇒ ~3 200 clk
+storage-stack), IOPoll (-21% ⇒ interrupt cost ~2 600 clk), SQPoll removes
+the syscall from the app core entirely (+32%).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class CostModel:
+    clock_hz: float = 3.7e9
+    # submission / completion
+    syscall: int = 5_120          # one io_uring_enter
+    submit_floor_nop: int = 600
+    submit_floor_read: int = 3_000
+    submit_floor_write: int = 3_300
+    complete_irq: int = 2_600     # interrupt-driven completion handling
+    complete_polled: int = 260    # IOPoll: reap from device queue
+    task_work: int = 300          # place CQE (DeferTR: inside enter)
+    preempt_ipi: int = 1_800      # default mode: IPI preemption (CoopTR: 0)
+    # per-op feature deltas
+    pin_copy: int = 700           # avoided by registered buffers (storage)
+    storage_stack: int = 3_200    # avoided by NVMe passthrough
+    # networking (per send/recv; Fig. 15/16)
+    sock_submit: int = 2_000
+    sock_speculative: int = 900   # wasted inline attempt (POLL_FIRST skips)
+    copy_per_byte: float = 1.5    # kernel copy incl. skb alloc, cycles/B
+    # (crossover vs zc_setup at ~1 KiB — paper Fig. 16 threshold)
+    zc_setup: int = 1_500         # zero-copy registration per op
+    multishot_amort: int = 1_200  # saved per recv after the first
+    # io_worker fallback (§2.2: +7.3 µs measured)
+    worker_overhead_s: float = 7.3e-6
+    sqpoll_wake_s: float = 30e-6  # §2.2: waking the SQPoll thread
+    sqpoll_idle_s: float = 100e-6  # sleep after idle timeout
+
+    def s(self, cycles: float) -> float:
+        return cycles / self.clock_hz
+
+
+DEFAULT_COSTS = CostModel()

@@ -1,0 +1,181 @@
+"""Cooperative fibers over the ring (paper §3.3.2).
+
+Each transaction runs as a generator-based fiber that yields I/O requests
+and is resumed when its completion arrives. Context switches are a Python
+generator resume — the analogue of the paper's "tens of cycles" Boost
+fiber switch; the simulated CPU charge is configurable.
+
+A fiber may yield:
+  * one ``IoRequest``       → resumed with its CQE,
+  * a list of IoRequests    → resumed with the CQE list once ALL complete
+    (this is how the buffer manager issues a batched eviction: N writes,
+    one submission),
+  * ``None``                → cooperative yield (re-queued).
+
+Because all concurrency is cooperative, data structures need no locks
+(paper: the B-tree restarts traversal if the world changed across a
+suspension point — see storage/btree.py).
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Generator, List, Optional
+
+from repro.core.adaptive import AdaptiveBatcher, SubmitPolicy
+from repro.core.ring import IoUring
+from repro.core.sqe import CQE, SQE
+
+
+@dataclass
+class IoRequest:
+    """What a fiber yields: a prepared-SQE builder. The scheduler assigns
+    user_data and decides when the batch enters the kernel."""
+    prep: Callable[[SQE, int], None]      # (sqe, user_data) -> None
+
+
+class Fiber:
+    _ids = itertools.count(1)
+
+    def __init__(self, gen: Generator):
+        self.id = next(Fiber._ids)
+        self.gen = gen
+        self.done = False
+        self.value: Any = None            # generator return value
+        self._pending = 0
+        self._results: List[CQE] = []
+        self._group = False
+
+    def __repr__(self):
+        return f"<Fiber {self.id}{' done' if self.done else ''}>"
+
+
+class FiberScheduler:
+    """Round-robin ready queue + completion-driven wakeups.
+
+    The submit policy decides when queued SQEs enter the kernel —
+    ``AdaptiveBatcher`` implements the paper's adaptive batching (§3.3.3):
+    flush early when few I/Os are in flight (keep the device busy), defer
+    when many are (amortize the syscall).
+    """
+
+    def __init__(self, ring: IoUring, *,
+                 policy: Optional[SubmitPolicy] = None,
+                 switch_cost_s: float = 20 / 3.7e9):
+        self.ring = ring
+        self.policy = policy or AdaptiveBatcher()
+        self.ready: deque = deque()
+        self.waiting: Dict[int, Fiber] = {}
+        self.switch_cost_s = switch_cost_s
+        self.inflight = 0
+        self._queued = 0                  # SQEs prepared but not submitted
+        self._uds = itertools.count(1)
+        self.completed_fibers = 0
+
+    # ------------------------------------------------------------------
+
+    def spawn(self, gen: Generator) -> Fiber:
+        f = Fiber(gen)
+        self.ready.append((f, None))
+        return f
+
+    def run(self, *, until: Optional[Callable[[], bool]] = None) -> None:
+        """Run until all fibers finish (or ``until`` returns True)."""
+        while True:
+            if until is not None and until():
+                return
+            if not self.ready and not self.waiting and self._queued == 0:
+                return
+            self._step()
+
+    # ------------------------------------------------------------------
+
+    _spins = 0
+
+    def _step(self) -> None:
+        if self.ready:
+            # livelock guard: if every ready fiber is just spinning on a
+            # condition (bare yields) while I/O is in flight, make progress
+            # on the timeline instead of burning the ready queue.
+            if self._spins > len(self.ready) + 1 and self.inflight:
+                self._flush()              # may drain everything
+                if not self.ring.cq and self.inflight:
+                    cqe = self.ring.wait_cqe()
+                    self._dispatch(cqe)
+                self._spins = 0
+            fiber, send_val = self.ready.popleft()
+            before = len(self.ready)
+            self._resume(fiber, send_val)
+            if self.ready and len(self.ready) > before and \
+                    self.ready[-1][0] is fiber and self.ready[-1][1] is None:
+                self._spins += 1
+            else:
+                self._spins = 0
+            if self._queued and self.policy.should_flush(
+                    queued=self._queued, inflight=self.inflight,
+                    ready=len(self.ready)):
+                self._flush()
+            return
+        # no ready fibers: everything is waiting on I/O -> flush + wait
+        if self._queued:
+            self._flush()
+        if self.inflight:
+            cqe = self.ring.wait_cqe()
+            self._dispatch(cqe)
+
+    def _resume(self, fiber: Fiber, send_val) -> None:
+        if self.switch_cost_s:
+            self.ring.tl.run_until(self.ring.tl.now + self.switch_cost_s)
+        try:
+            req = fiber.gen.send(send_val)
+        except StopIteration as stop:
+            fiber.done = True
+            fiber.value = stop.value
+            self.completed_fibers += 1
+            return
+        if req is None:                   # cooperative re-queue
+            self.ready.append((fiber, None))
+            return
+        reqs = req if isinstance(req, list) else [req]
+        fiber._group = isinstance(req, list)
+        fiber._pending = len(reqs)
+        fiber._results = []
+        for r in reqs:
+            if not isinstance(r, IoRequest):
+                raise TypeError(f"fiber yielded {type(r)}")
+            sqe = self.ring.get_sqe()
+            while sqe is None:            # SQ full: flush and retry
+                self._flush()
+                sqe = self.ring.get_sqe()
+            ud = next(self._uds)
+            r.prep(sqe, ud)
+            sqe.user_data = ud
+            self.waiting[ud] = fiber
+            self.inflight += 1
+            self._queued += 1
+
+    def _flush(self) -> None:
+        if self._queued:
+            self.ring.submit()
+            self._queued = 0
+        self._drain_some()
+
+    def _drain_some(self) -> None:
+        while True:
+            cqe = self.ring.peek_cqe()
+            if cqe is None:
+                return
+            self._dispatch(cqe)
+
+    def _dispatch(self, cqe: CQE) -> None:
+        fiber = self.waiting.pop(cqe.user_data, None)
+        self.inflight -= 1
+        if fiber is None:
+            return
+        fiber._pending -= 1
+        fiber._results.append(cqe)
+        if fiber._pending == 0:
+            val = fiber._results if fiber._group else fiber._results[0]
+            self.ready.append((fiber, val))

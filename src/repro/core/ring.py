@@ -1,0 +1,537 @@
+"""The io_uring ring, adapted: SQ/CQ over a discrete-event kernel model.
+
+API mirrors liburing so the mapping to the paper is one-to-one:
+
+    ring = IoUring(timeline, sq_depth=256,
+                   setup=SetupFlags.DEFER_TASKRUN | SetupFlags.SINGLE_ISSUER)
+    ring.register_device(fd, SimNVMe(timeline))
+    sqe = ring.get_sqe()
+    prep_read(sqe, fd, buf, offset, length, user_data=...)
+    ring.submit()                      # one "enter" for the whole batch
+    cqe = ring.wait_cqe()
+
+Execution paths (paper Fig. 3): inline completion, poll-set async
+completion, io_worker fallback — each charged with the CostModel and
+tagged in the CQE flags so benchmarks can attribute cycles.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.backends import FileBackend, SimNVMe, SimSocket
+from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.sqe import (CQE, EAGAIN, ECANCELED, EINVAL, ETIME, SQE,
+                            CqeFlags, Op, RingStats, SetupFlags, SqeFlags)
+from repro.core.timeline import Timeline
+
+
+class RegisteredBuffers:
+    """Pre-registered (pinned) buffer table — paper §3.4.1 RegBufs."""
+
+    def __init__(self, buffers: List[bytearray]):
+        self.buffers = [memoryview(b) for b in buffers]
+
+    def __getitem__(self, i: int) -> memoryview:
+        return self.buffers[i]
+
+    def __len__(self):
+        return len(self.buffers)
+
+
+class IoUring:
+    def __init__(self, timeline: Timeline, *, sq_depth: int = 256,
+                 cq_depth: int = 0, setup: SetupFlags = SetupFlags.NONE,
+                 costs: CostModel = DEFAULT_COSTS, n_workers: int = 32):
+        self.tl = timeline
+        self.sq_depth = sq_depth
+        self.cq_depth = cq_depth or sq_depth * 2
+        self.setup = setup
+        self.costs = costs
+        self.sq: deque = deque()
+        self.cq: deque = deque()
+        self._pending_task_work: deque = deque()   # completed, not yet CQE
+        self._devices: Dict[int, object] = {}
+        self._fixed_files: Dict[int, int] = {}
+        self.bufs: Optional[RegisteredBuffers] = None
+        self.stats = RingStats()
+        self._workers_free = [0.0] * n_workers
+        self.active_workers = 0
+        # SQPoll state
+        self._sqpoll_busy_until = 0.0
+        self._sqpoll_asleep = True
+        self._chain: List[SQE] = []
+        self._device_cq: deque = deque()
+
+    # ------------------------------------------------------------------ API
+
+    def register_device(self, fd: int, dev) -> None:
+        self._devices[fd] = dev
+
+    def register_buffers(self, buffers: List[bytearray]) -> None:
+        self.bufs = RegisteredBuffers(buffers)
+
+    def register_files(self, fds: List[int]) -> None:
+        for i, fd in enumerate(fds):
+            self._fixed_files[i] = fd
+
+    def get_sqe(self) -> Optional[SQE]:
+        if len(self.sq) >= self.sq_depth:
+            return None
+        sqe = SQE()
+        self.sq.append(sqe)
+        return sqe
+
+    def sq_space_left(self) -> int:
+        return self.sq_depth - len(self.sq)
+
+    def submit(self) -> int:
+        """Submit all queued SQEs. SQPoll: no syscall — the kernel thread
+        picks them up (wake latency if asleep). Otherwise: one enter()."""
+        if self.setup & SetupFlags.SQPOLL:
+            return self._sqpoll_submit()
+        return self._enter(len(self.sq), 0)
+
+    def submit_and_wait(self, nr: int) -> int:
+        if self.setup & SetupFlags.SQPOLL:
+            n = self._sqpoll_submit()
+            self.wait_cqes(nr)
+            return n
+        return self._enter(len(self.sq), nr)
+
+    def peek_cqe(self) -> Optional[CQE]:
+        self._poll_device_queues()
+        if self.cq:
+            self.stats.cqes_reaped += 1
+            return self.cq.popleft()
+        return None
+
+    def wait_cqe(self) -> CQE:
+        return self.wait_cqes(1)[0]
+
+    def wait_cqes(self, nr: int) -> List[CQE]:
+        """Block until nr completions are available (reaps task work —
+        DeferTR runs it exactly here / in enter, per GL3)."""
+        out: List[CQE] = []
+        while len(out) < nr:
+            c = self.peek_cqe()
+            if c is not None:
+                out.append(c)
+                continue
+            self._run_task_work()
+            if self.cq:
+                continue
+            if not self.tl.run_next():
+                raise RuntimeError(
+                    f"deadlock: waiting for {nr - len(out)} more CQEs with "
+                    f"an empty timeline (inflight bug?)")
+        return out
+
+    # -------------------------------------------------------------- kernel
+
+    def _enter(self, to_submit: int, min_complete: int) -> int:
+        self.stats.enters += 1
+        self._charge(self.costs.syscall, False)
+        n = 0
+        for _ in range(min(to_submit, len(self.sq))):
+            sqe = self.sq.popleft()
+            self._kernel_submit(sqe)
+            n += 1
+        self.stats.sqes_submitted += n
+        self._run_task_work()
+        if min_complete:
+            self.wait_cqes_into_cq(min_complete)
+        return n
+
+    def wait_cqes_into_cq(self, nr: int) -> None:
+        while len(self.cq) < nr:
+            self._poll_device_queues()
+            self._run_task_work()
+            if len(self.cq) >= nr:
+                break
+            if not self.tl.run_next():
+                raise RuntimeError("deadlock waiting for completions")
+
+    def _sqpoll_submit(self) -> int:
+        c = self.costs
+        now = self.tl.now
+        if self._sqpoll_asleep:
+            # doorbell: wake the kernel thread (30 µs, paper §2.2)
+            self._sqpoll_busy_until = now + c.sqpoll_wake_s
+            self._sqpoll_asleep = False
+            self.stats.sqpoll_wakeups += 1
+        n = len(self.sq)
+        t = max(now, self._sqpoll_busy_until)
+        sqes = list(self.sq)
+        self.sq.clear()
+
+        def drain():
+            for sqe in sqes:
+                self._kernel_submit(sqe, on_sqpoll=True)
+        self.tl.at(t, drain)
+        self._sqpoll_busy_until = t + c.s(c.submit_floor_read) * n
+        self.stats.sqes_submitted += n
+        # the app spent no syscall; sqpoll core burns its own time
+        self.stats.cpu_seconds_sqpoll += c.s(c.submit_floor_read) * n
+        return n
+
+    def _kernel_submit(self, sqe: SQE, *, on_sqpoll: bool = False) -> None:
+        c = self.costs
+        sqe._t_submit = self.tl.now          # for CQE latency accounting
+        # linking: buffer the chain until a non-linked SQE terminates it
+        if sqe.flags & SqeFlags.IO_LINK:
+            self._chain.append(sqe)
+            return
+        if self._chain:
+            chain = self._chain + [sqe]
+            self._chain = []
+            self._run_chain(chain)
+            return
+        self._issue(sqe, on_sqpoll=on_sqpoll)
+
+    def _run_chain(self, chain: List[SQE]) -> None:
+        """IO_LINK semantics: each op starts after the previous completes.
+        A LINK_TIMEOUT bounds its predecessor."""
+
+        def run(idx: int):
+            if idx >= len(chain):
+                return
+            sqe = chain[idx]
+            if sqe.op == Op.LINK_TIMEOUT:
+                run(idx + 1)   # handled when its predecessor was issued
+                return
+            nxt = chain[idx + 1] if idx + 1 < len(chain) else None
+            timeout = nxt.timeout if (nxt is not None and
+                                      nxt.op == Op.LINK_TIMEOUT) else None
+            self._issue(sqe, then=lambda: run(idx + 1), timeout=timeout,
+                        timeout_ud=nxt.user_data if timeout else 0)
+        run(0)
+
+    def _issue(self, sqe: SQE, *, then=None, timeout=None, timeout_ud=0,
+               on_sqpoll: bool = False) -> None:
+        c = self.costs
+        if sqe.op == Op.NOP:
+            self._charge(c.submit_floor_nop, on_sqpoll)
+            if sqe.flags & SqeFlags.ASYNC:
+                self._worker_complete(sqe, 0.0, 0, then)
+            else:
+                self._complete(sqe, 0, CqeFlags.INLINE, then)
+            return
+
+        if sqe.op == Op.TIMEOUT:
+            self.tl.at(self.tl.now + (sqe.timeout or 0.0),
+                       lambda: self._complete(sqe, ETIME, CqeFlags.POLLED,
+                                              then))
+            return
+
+        dev = self._resolve_device(sqe)
+        if dev is None:
+            self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
+            return
+
+        if isinstance(dev, SimSocket):
+            self._issue_socket(sqe, dev, then, on_sqpoll)
+            return
+        if isinstance(dev, FileBackend):
+            self._issue_file(sqe, dev, then)
+            return
+        self._issue_nvme(sqe, dev, then, timeout, timeout_ud, on_sqpoll)
+
+    # ----------------------------------------------------- storage path
+
+    def _issue_nvme(self, sqe: SQE, dev: SimNVMe, then, timeout,
+                    timeout_ud: int, on_sqpoll: bool) -> None:
+        c = self.costs
+        write = sqe.op in (Op.WRITEV, Op.WRITE_FIXED)
+        cost = c.submit_floor_write if write else c.submit_floor_read
+        if sqe.op == Op.URING_CMD or sqe.cmd:         # NVMe passthrough
+            if not dev.supports_passthrough():
+                self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
+                return
+        else:
+            cost += c.storage_stack
+        fixed = sqe.op in (Op.READ_FIXED, Op.WRITE_FIXED)
+        if not fixed and sqe.length > 0:
+            cost += c.pin_copy
+            self.stats.bounce_bytes_copied += sqe.length
+        self._charge(cost, on_sqpoll)
+
+        buf = self._buf_for(sqe)
+        if write:
+            dev.content_write(sqe.offset, buf, sqe.length)
+        elif sqe.op in (Op.READV, Op.READ_FIXED):
+            dev.content_read(sqe.offset, buf, sqe.length)
+
+        path, delay, res = dev.service(sqe)
+        if sqe.flags & SqeFlags.ASYNC:
+            path = "worker"
+        if path == "worker":
+            self._worker_complete(sqe, delay, res, then)
+            return
+        dev.inflight += 1
+        done_t = self.tl.now + delay
+        if timeout is not None and delay > timeout:
+            self.tl.at(self.tl.now + timeout, lambda: (
+                self._complete(sqe, ECANCELED, CqeFlags.POLLED, None),
+                self._complete(SQE(user_data=timeout_ud), ETIME,
+                               CqeFlags.POLLED, then)))
+            return
+
+        def finish():
+            dev.inflight -= 1
+            self._async_complete(sqe, res, then)
+        self.tl.at(done_t, finish)
+
+    # ----------------------------------------------------- network path
+
+    def _issue_socket(self, sqe: SQE, sock: SimSocket, then,
+                      on_sqpoll: bool) -> None:
+        c = self.costs
+        zc = sqe.op in (Op.SEND_ZC, Op.RECV_ZC)
+        fixed = sqe.buf_index >= 0
+        cost = c.sock_submit
+        if sqe.op in (Op.SEND, Op.SEND_ZC):
+            if zc or fixed:
+                cost += c.zc_setup
+            else:
+                cost += int(c.copy_per_byte * sqe.length)
+                self.stats.bounce_bytes_copied += sqe.length
+            self._charge(cost, on_sqpoll)
+            delay = sock.service_send(sqe.length)
+            self.tl.at(self.tl.now + delay,
+                       lambda: self._async_complete(sqe, sqe.length, then,
+                                                    zc_notif=zc))
+            return
+        # RECV / RECV_ZC / MULTISHOT
+        if not (sqe.flags & SqeFlags.POLL_FIRST):
+            cost += c.sock_speculative       # speculative inline attempt
+        self._charge(cost, on_sqpoll)
+        multishot = bool(sqe.flags & SqeFlags.MULTISHOT)
+        got = None if multishot else sock.try_recv()
+        if got is not None and not (sqe.flags & SqeFlags.POLL_FIRST):
+            if not (zc or fixed):
+                self._charge(int(c.copy_per_byte * got), on_sqpoll)
+                self.stats.bounce_bytes_copied += got
+            self._complete(sqe, got, CqeFlags.INLINE, then)
+            return
+
+        def on_ready():
+            g = sock.try_recv()
+            if g is None:
+                return
+            sock.rx_waiters.remove(on_ready)
+            if not (zc or fixed):                  # kernel->user copy
+                self._charge(int(c.copy_per_byte * g), False)
+                self.stats.bounce_bytes_copied += g
+            flags = CqeFlags.POLLED
+            if sqe.flags & SqeFlags.MULTISHOT:
+                flags |= CqeFlags.MORE
+                sock.rx_waiters.append(on_ready)   # re-arm (one SQE)
+            self._async_complete(sqe, g, then, flags=flags)
+        sock.rx_waiters.append(on_ready)
+        # drain anything already queued (multishot: one CQE per message)
+        while sock.rx_queue and on_ready in sock.rx_waiters:
+            before = len(sock.rx_queue)
+            on_ready()
+            if len(sock.rx_queue) == before:
+                break
+
+    # ----------------------------------------------------- file path
+
+    def _issue_file(self, sqe: SQE, dev: FileBackend, then) -> None:
+        buf = self._buf_for(sqe)
+        if sqe.op in (Op.READV, Op.READ_FIXED):
+            res = dev.pread(buf, sqe.offset, sqe.length)
+            self._complete(sqe, res, CqeFlags.INLINE, then)
+        elif sqe.op in (Op.WRITEV, Op.WRITE_FIXED):
+            res = dev.pwrite(buf, sqe.offset, sqe.length)
+            self._complete(sqe, res, CqeFlags.INLINE, then)
+        elif sqe.op == Op.FSYNC:
+            self._worker_complete(sqe, 0.0, dev.fsync(), then)
+        else:
+            self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
+
+    # ----------------------------------------------------- completion
+
+    def _worker_complete(self, sqe: SQE, device_delay: float, res: int,
+                         then) -> None:
+        """io_worker fallback: +7.3 µs overhead, bounded pool (§2.2)."""
+        c = self.costs
+        i = min(range(len(self._workers_free)),
+                key=lambda j: self._workers_free[j])
+        start = max(self.tl.now, self._workers_free[i])
+        done = start + c.worker_overhead_s + device_delay
+        self._workers_free[i] = done
+        self.stats.worker_fallbacks += 1
+        self.active_workers += 1
+
+        def finish():
+            self.active_workers -= 1
+            self._async_complete(sqe, res, then, flags=CqeFlags.WORKER)
+        self.tl.at(done, finish)
+
+    def _async_complete(self, sqe: SQE, res: int, then,
+                        flags: CqeFlags = CqeFlags.POLLED,
+                        zc_notif: bool = False) -> None:
+        c = self.costs
+        iopoll = bool(self.setup & SetupFlags.IOPOLL)
+        cqe = CQE(user_data=sqe.user_data, res=res,
+                  flags=flags | (CqeFlags.ZC_NOTIF if zc_notif
+                                 else CqeFlags.NONE),
+                  t_submit=getattr(sqe, "_t_submit", self.tl.now),
+                  t_complete=self.tl.now)
+        if iopoll:
+            self._device_cq.append(cqe)
+        else:
+            self._pending_task_work.append(cqe)
+            if not (self.setup & SetupFlags.DEFER_TASKRUN):
+                # default & CoopTR: task work runs on the next kernel
+                # transition; default mode may IPI-preempt a busy app core
+                if not (self.setup & SetupFlags.COOP_TASKRUN):
+                    self._charge(c.preempt_ipi, False)
+                self._run_task_work()
+        if then:   # IO_LINK chain progression is kernel-side
+            then()
+
+    def _poll_device_queues(self) -> None:
+        if not (self.setup & SetupFlags.IOPOLL):
+            return
+        c = self.costs
+        while self._device_cq:
+            cqe = self._device_cq.popleft()
+            self._charge(c.complete_polled, False)
+            self.cq.append(cqe)
+            self.stats.polled_completions += 1
+
+    def _run_task_work(self) -> None:
+        c = self.costs
+        while self._pending_task_work:
+            cqe = self._pending_task_work.popleft()
+            self._charge(c.task_work, False)
+            if not (cqe.flags & CqeFlags.WORKER):
+                self._charge(c.complete_irq if not
+                             (self.setup & SetupFlags.IOPOLL) else 0, False)
+            self.cq.append(cqe)
+
+    def _complete(self, sqe: SQE, res: int, flags: CqeFlags, then) -> None:
+        cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
+                  t_submit=getattr(sqe, "_t_submit", self.tl.now),
+                  t_complete=self.tl.now)
+        self.cq.append(cqe)
+        if flags & CqeFlags.INLINE:
+            self.stats.inline_completions += 1
+        if then:
+            then()
+
+    # ----------------------------------------------------- helpers
+
+    def _resolve_device(self, sqe: SQE):
+        fd = sqe.fd
+        if sqe.flags & SqeFlags.FIXED_FILE:
+            fd = self._fixed_files.get(fd, -1)
+        return self._devices.get(fd)
+
+    def _buf_for(self, sqe: SQE):
+        if sqe.buf_index >= 0 and self.bufs is not None:
+            return self.bufs[sqe.buf_index]
+        return sqe.buf
+
+    def _charge(self, cycles: float, on_sqpoll: bool) -> None:
+        dt = self.costs.s(cycles)
+        if on_sqpoll:
+            self.stats.cpu_seconds_sqpoll += dt
+            self._sqpoll_busy_until = max(self._sqpoll_busy_until,
+                                          self.tl.now) + dt
+        else:
+            self.stats.cpu_seconds_app += dt
+            self.tl.run_until(self.tl.now + dt)
+
+
+# ---------------------------------------------------------------------------
+# prep_* helpers (liburing style)
+# ---------------------------------------------------------------------------
+
+def _prep(sqe: SQE, op: Op, fd: int, buf, offset: int, length: int,
+          user_data: int, flags: SqeFlags) -> SQE:
+    sqe.op = op
+    sqe.fd = fd
+    sqe.buf = buf
+    sqe.offset = offset
+    sqe.length = length
+    sqe.user_data = user_data
+    sqe.flags = flags
+    return sqe
+
+
+def prep_read(sqe, fd, buf, offset, length, user_data=0,
+              flags=SqeFlags.NONE):
+    return _prep(sqe, Op.READV, fd, buf, offset, length, user_data, flags)
+
+
+def prep_write(sqe, fd, buf, offset, length, user_data=0,
+               flags=SqeFlags.NONE):
+    return _prep(sqe, Op.WRITEV, fd, buf, offset, length, user_data, flags)
+
+
+def prep_read_fixed(sqe, fd, buf_index, offset, length, user_data=0,
+                    flags=SqeFlags.NONE):
+    s = _prep(sqe, Op.READ_FIXED, fd, None, offset, length, user_data, flags)
+    s.buf_index = buf_index
+    return s
+
+
+def prep_write_fixed(sqe, fd, buf_index, offset, length, user_data=0,
+                     flags=SqeFlags.NONE):
+    s = _prep(sqe, Op.WRITE_FIXED, fd, None, offset, length, user_data,
+              flags)
+    s.buf_index = buf_index
+    return s
+
+
+def prep_fsync(sqe, fd, user_data=0, flags=SqeFlags.NONE, nvme_flush=False):
+    s = _prep(sqe, Op.FSYNC, fd, None, 0, 0, user_data, flags)
+    if nvme_flush:
+        s.cmd = "nvme-flush"
+    return s
+
+
+def prep_send(sqe, fd, length, user_data=0, flags=SqeFlags.NONE,
+              zero_copy=False, buf_index=-1):
+    s = _prep(sqe, Op.SEND_ZC if zero_copy else Op.SEND, fd, None, 0,
+              length, user_data, flags)
+    s.buf_index = buf_index
+    return s
+
+
+def prep_recv(sqe, fd, length=0, user_data=0, flags=SqeFlags.NONE,
+              zero_copy=False, buf_index=-1):
+    s = _prep(sqe, Op.RECV_ZC if zero_copy else Op.RECV, fd, None, 0,
+              length, user_data, flags)
+    s.buf_index = buf_index
+    return s
+
+
+def prep_nop(sqe, user_data=0, flags=SqeFlags.NONE):
+    return _prep(sqe, Op.NOP, -1, None, 0, 0, user_data, flags)
+
+
+def prep_timeout(sqe, seconds, user_data=0, flags=SqeFlags.NONE):
+    s = _prep(sqe, Op.TIMEOUT, -1, None, 0, 0, user_data, flags)
+    s.timeout = seconds
+    return s
+
+
+def prep_link_timeout(sqe, seconds, user_data=0):
+    """Bounds the PREVIOUS (IO_LINK'd) op — hedged-read building block."""
+    s = _prep(sqe, Op.LINK_TIMEOUT, -1, None, 0, 0, user_data,
+              SqeFlags.NONE)
+    s.timeout = seconds
+    return s
+
+
+def prep_uring_cmd(sqe, fd, cmd, buf=None, offset=0, length=0, user_data=0,
+                   flags=SqeFlags.NONE):
+    s = _prep(sqe, Op.URING_CMD, fd, buf, offset, length, user_data, flags)
+    s.cmd = cmd
+    return s

@@ -1,0 +1,116 @@
+"""Submission/completion queue entries — the io_uring wire format, adapted.
+
+Opcode and flag names follow ``io_uring.h`` so the mapping to the paper is
+one-to-one.  A few TPU-framework-specific opcodes are added (DEVICE_PUT,
+DEVICE_GET) for the host↔accelerator staging path; they behave like READ/WRITE
+against a "device memory" backend.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+class Op(enum.IntEnum):
+    NOP = 0
+    READV = 1            # read into a plain (unregistered) buffer
+    WRITEV = 2           # write from a plain buffer
+    READ_FIXED = 3       # read into a registered buffer slot
+    WRITE_FIXED = 4      # write from a registered buffer slot
+    FSYNC = 5            # durability barrier (blocking -> io_worker path)
+    SEND = 6
+    RECV = 7
+    SEND_ZC = 8          # zero-copy send (pinned user memory, no bounce copy)
+    RECV_ZC = 9          # zero-copy receive (NIC header split; payload DMA'd)
+    TIMEOUT = 10
+    LINK_TIMEOUT = 11    # bounds the linked previous op
+    URING_CMD = 12       # NVMe passthrough (bypasses the generic storage stack)
+    POLL_ADD = 13
+
+
+class SqeFlags(enum.IntFlag):
+    NONE = 0
+    IO_LINK = enum.auto()       # next SQE starts only after this one completes
+    ASYNC = enum.auto()         # force the io_worker path
+    MULTISHOT = enum.auto()     # one SQE, many CQEs (recv)
+    POLL_FIRST = enum.auto()    # skip the speculative inline attempt
+    FIXED_FILE = enum.auto()    # fd is an index into the registered-file table
+
+
+class SetupFlags(enum.IntFlag):
+    NONE = 0
+    SQPOLL = enum.auto()        # kernel-side submission polling thread
+    IOPOLL = enum.auto()        # completion polling from the device queue
+    DEFER_TASKRUN = enum.auto() # reap completions only inside enter (recommended)
+    COOP_TASKRUN = enum.auto()  # suppress IPIs, still reap on any transition
+    SINGLE_ISSUER = enum.auto() # one submitting thread (enables internal opts)
+
+
+class CqeFlags(enum.IntFlag):
+    NONE = 0
+    WORKER = enum.auto()     # completed on the io_worker fallback path (slow!)
+    INLINE = enum.auto()     # completed inline during submission
+    POLLED = enum.auto()     # completed via the poll set
+    MORE = enum.auto()       # multishot: more CQEs will follow
+    ZC_NOTIF = enum.auto()   # zero-copy send: buffer-release notification
+
+
+# errno-style results (negative in CQE.res, like io_uring)
+ECANCELED = -125
+ETIME = -62
+EINVAL = -22
+EAGAIN = -11
+ENOENT = -2
+
+
+@dataclass
+class SQE:
+    op: Op = Op.NOP
+    fd: int = -1
+    offset: int = 0
+    length: int = 0
+    buf: Any = None            # memoryview / np.ndarray / bytes
+    buf_index: int = -1        # registered-buffer slot for *_FIXED ops
+    user_data: int = 0
+    flags: SqeFlags = SqeFlags.NONE
+    timeout: Optional[float] = None   # for TIMEOUT / LINK_TIMEOUT (seconds)
+    cmd: Any = None            # URING_CMD payload (e.g. ("flush",))
+
+    def clear(self) -> None:
+        self.__init__()
+
+
+@dataclass
+class CQE:
+    user_data: int = 0
+    res: int = 0
+    flags: CqeFlags = CqeFlags.NONE
+    # not in the ABI, but handy for analysis/benchmarks:
+    t_complete: float = 0.0
+    t_submit: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_complete - self.t_submit
+
+
+@dataclass
+class RingStats:
+    """Counters used by benchmarks and by the guideline checks (GL3: a high
+    worker-fallback rate indicates a suboptimal I/O pattern)."""
+
+    enters: int = 0
+    sqes_submitted: int = 0
+    cqes_reaped: int = 0
+    inline_completions: int = 0
+    polled_completions: int = 0
+    worker_fallbacks: int = 0
+    sqpoll_wakeups: int = 0
+    bounce_bytes_copied: int = 0   # kernel<->user copies avoided by RegBufs/ZC
+    cpu_seconds_app: float = 0.0   # CPU charged to the application core
+    cpu_seconds_sqpoll: float = 0.0
+
+    def batch_efficiency(self) -> float:
+        return self.sqes_submitted / max(1, self.enters)

@@ -1,0 +1,55 @@
+"""Discrete-event timeline driving the simulated I/O world.
+
+The paper measures on real NVMe arrays and 400G NICs; this container is
+CPU-only, so device behaviour is modeled as events on a shared timeline
+(latencies/bandwidths from the paper's Table 1 & §2) while *CPU* costs are
+charged to the virtual clock explicitly. Everything is deterministic.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+from repro.core.clock import RealClock, VirtualClock
+
+
+class Timeline:
+    def __init__(self, clock: Optional[VirtualClock] = None):
+        self.clock = clock or VirtualClock()
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    @property
+    def now(self) -> float:
+        return self.clock.now()
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt, fn)
+
+    def run_until(self, t: float) -> None:
+        """Execute all events with timestamp <= t; clock ends at t."""
+        while self._heap and self._heap[0][0] <= t:
+            et, _, fn = heapq.heappop(self._heap)
+            if et > self.clock.now():
+                self.clock.advance_to(et)
+            fn()
+        if self.clock.now() < t:
+            self.clock.advance_to(t)
+
+    def run_next(self) -> bool:
+        """Advance to and run the next pending event. False if none."""
+        if not self._heap:
+            return False
+        et, _, fn = heapq.heappop(self._heap)
+        if et > self.clock.now():
+            self.clock.advance_to(et)
+        fn()
+        return True
+
+    def pending(self) -> int:
+        return len(self._heap)

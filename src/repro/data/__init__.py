@@ -1,0 +1,1 @@
+from repro.data.pipeline import RingLoader, TokenStore, make_synthetic_corpus

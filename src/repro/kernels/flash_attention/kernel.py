@@ -1,0 +1,116 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Grid: (batch×heads, nq, nk) with the k dimension iterated sequentially per
+(bh, i); online-softmax state (m, l, acc) lives in VMEM scratch across the
+k steps. Block shapes are MXU-aligned (block_q × head_dim with head_dim a
+multiple of 128 recommended); K/V stream through VMEM one block at a time
+(HBM→VMEM pipelined by the Pallas grid machinery), so the working set is
+O(block_q·hd + block_k·hd) regardless of sequence length.
+
+GQA is handled by the index map: query head h reads KV head h // group.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, causal: bool, window: int,
+                      block_q: int, block_k: int, nk: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    gq = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+    gk = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+    allow = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        allow &= gk <= gq
+    if window:
+        allow &= gk > gq - window
+    s = jnp.where(allow, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, Sk, KH, hd). Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0
+    nq, nk = S // block_q, Sk // block_k
+
+    # layout: fold heads into the leading grid dim
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KH, Sk, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KH, Sk, hd)
+
+    def kv_index(bh, i, j):
+        b, h = bh // H, bh % H
+        return (b * KH + h // G, j, 0)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=float(scale), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    return reference_attention(q, k, v, causal=causal, window=window,
+                               scale=scale)

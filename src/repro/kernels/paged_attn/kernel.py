@@ -1,0 +1,117 @@
+"""Paged-KV decode attention — Pallas TPU kernel with scalar prefetch.
+
+The device-side mirror of the paper's buffer manager: the KV cache lives
+in a PAGE POOL (physical pages of ``page_sz`` tokens); a per-sequence
+page table maps logical blocks to pool pages. The page table is a
+SCALAR-PREFETCH operand — Pallas reads it ahead of the grid step to drive
+the HBM→VMEM DMA for exactly the pages the sequence owns (the TPU
+analogue of fix()ing a page before use; random "reads" become pipelined
+gathers instead of blocking faults).
+
+Grid: (B·KH, n_blocks) — one query-head group per KV head (GQA), online
+softmax across a sequence's pages in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  page_sz: int, nblk: int, scale: float, G: int):
+    bk = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (page_sz, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # valid positions: global token index < length of this sequence
+    seq_len = len_ref[bk]
+    pos = j * page_sz + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (1, page_sz), 1)[0]
+    allow = pos < seq_len
+    s = jnp.where(allow[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    scale: float | None = None, interpret: bool = False):
+    """q: (B, H, hd); pools: (n_pages, page_sz, KH, hd);
+    page_table: (B·KH-compatible) (B, nblk) int32; lengths: (B,) int32.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    n_pages, page_sz, KH, _ = k_pages.shape
+    G = H // KH
+    nblk = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, KH, G, hd).reshape(B * KH, G, hd)
+    kp = k_pages.transpose(0, 2, 1, 3).reshape(n_pages * KH, page_sz, hd)
+    vp = v_pages.transpose(0, 2, 1, 3).reshape(n_pages * KH, page_sz, hd)
+    # table entry for (b, kh, j): physical_page * KH + kh
+    tbl = (page_table[:, None, :] * KH +
+           jnp.arange(KH)[None, :, None]).reshape(B * KH, nblk)
+    lens = jnp.repeat(lengths, KH)
+
+    def kv_index(bk, j, table, lens_):
+        return (table[bk, j], 0, 0)
+
+    kernel = functools.partial(_paged_kernel, page_sz=page_sz, nblk=nblk,
+                               scale=float(scale), G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KH, nblk),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda bk, j, table, lens_: (bk, 0, 0)),
+            pl.BlockSpec((1, page_sz, hd), kv_index),
+            pl.BlockSpec((1, page_sz, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd),
+                               lambda bk, j, table, lens_: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KH, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, qg, kp, vp)
+    return out.reshape(B, KH, G, hd).reshape(B, H, hd)

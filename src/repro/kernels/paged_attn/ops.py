@@ -1,0 +1,22 @@
+"""jit'd wrapper for the paged-attention decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attn.kernel import paged_attention as _kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _kernel(q, k_pages, v_pages, page_table, lengths,
+                   interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: gather the pages into a dense cache, run decode
+attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        scale=None):
+    B, H, hd = q.shape
+    n_pages, page_sz, KH, _ = k_pages.shape
+    nblk = page_table.shape[1]
+    k = k_pages[page_table]          # (B, nblk, page_sz, KH, hd)
+    v = v_pages[page_table]
+    k = k.reshape(B, nblk * page_sz, KH, hd)
+    v = v.reshape(B, nblk * page_sz, KH, hd)
+    outs = []
+    for b in range(B):
+        outs.append(decode_attention(
+            q[b:b + 1], k[b:b + 1], v[b:b + 1], lengths[b] - 1,
+            scale=scale))
+    return jnp.concatenate(outs, axis=0)

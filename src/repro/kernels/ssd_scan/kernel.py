@@ -1,0 +1,125 @@
+"""Mamba2 SSD intra-chunk kernel — Pallas TPU.
+
+The SSD duality splits the computation into a quadratic intra-chunk part
+(attention-like, MXU-friendly — this kernel) and a linear inter-chunk
+recurrence (tiny, done in jnp by the caller; see ops.py).
+
+Grid: (B, n_chunks). Per step the kernel computes, entirely in VMEM:
+    cs      = cumsum(dt ⊙ A)                     (cl, nh)
+    y_diag  = (C·Bᵀ ⊙ L) · (x·dt)                (cl, nh·hp)
+    states  = Bᵀ · (decay_out ⊙ x·dt)            (nh·hp, ns)
+    exp_cs, exp_total                            (cl, nh), (1, nh)
+where L = exp(cs_i − cs_j) on the lower triangle.
+
+Block shapes: one whole chunk per grid step — (cl, nh·hp) x tiles with
+cl = 128–256 keeps the (cl × cl) score matrix and the state outer product
+inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref,
+                      y_ref, st_ref, ecs_ref, etot_ref, *,
+                      cl: int, nh: int, hp: int, ns: int):
+    x = x_ref[0].astype(jnp.float32)              # (cl, nh*hp)
+    dt = dt_ref[0].astype(jnp.float32)            # (cl, nh)
+    A = -jnp.exp(A_ref[...].astype(jnp.float32))  # (1, nh)
+    Bm = B_ref[0].astype(jnp.float32)             # (cl, ns)
+    Cm = C_ref[0].astype(jnp.float32)             # (cl, ns)
+
+    dA = dt * A                                   # (cl, nh)
+    cs = jnp.cumsum(dA, axis=0)
+    xdt = x * jnp.repeat(dt, hp, axis=1)          # (cl, nh*hp)
+
+    # scores (cl, cl) shared across heads; per-head decay L
+    sc = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    tri = ii >= jj
+
+    # y_diag: loop over heads (hp-wide tiles) to keep L per-head in VMEM
+    def head_body(h, y):
+        seg = cs[:, h][:, None] - cs[:, h][None, :]        # (cl, cl)
+        L = jnp.exp(jnp.where(tri, seg, -1e9))
+        att = sc * L
+        xh = jax.lax.dynamic_slice(xdt, (0, h * hp), (cl, hp))
+        yh = jax.lax.dot_general(att, xh, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(y, yh, (0, h * hp))
+
+    y = jax.lax.fori_loop(0, nh, head_body,
+                          jnp.zeros((cl, nh * hp), jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # chunk state: states[h·hp+p, n] = Σ_j B[j,n] · decay_out[j,h] · xdt[j,h,p]
+    total = cs[-1:, :]                            # (1, nh)
+    dec_out = jnp.exp(total - cs)                 # (cl, nh)
+    xw = xdt * jnp.repeat(dec_out, hp, axis=1)    # (cl, nh*hp)
+    st = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0] = st.astype(st_ref.dtype)           # (nh*hp, ns)
+    ecs_ref[0] = jnp.exp(cs).astype(ecs_ref.dtype)
+    etot_ref[0] = jnp.exp(total).astype(etot_ref.dtype)
+
+
+def ssd_chunk_call(x, dt, A_log, B_, C_, *, chunk: int,
+                   interpret: bool = False):
+    """x: (B, S, nh, hp); dt: (B, S, nh); A_log: (nh,); B_/C_: (B, S, ns).
+
+    Returns per-chunk pieces:
+      y_diag  (B, nc, cl, nh, hp)
+      states  (B, nc, nh, hp, ns)
+      exp_cs  (B, nc, cl, nh)
+      exp_tot (B, nc, nh)
+    """
+    B, S, nh, hp = x.shape
+    ns = B_.shape[-1]
+    cl = min(chunk, S)
+    assert S % cl == 0
+    nc = S // cl
+
+    xf = x.reshape(B, nc, cl, nh * hp).reshape(B * nc, cl, nh * hp)
+    dtf = dt.reshape(B * nc, cl, nh)
+    Bf = B_.reshape(B * nc, cl, ns)
+    Cf = C_.reshape(B * nc, cl, ns)
+    A2 = A_log.reshape(1, nh)
+
+    kernel = functools.partial(_ssd_chunk_kernel, cl=cl, nh=nh, hp=hp,
+                               ns=ns)
+    y, st, ecs, etot = pl.pallas_call(
+        kernel,
+        grid=(B * nc,),
+        in_specs=[
+            pl.BlockSpec((1, cl, nh * hp), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, cl, nh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, nh), lambda g: (0, 0)),
+            pl.BlockSpec((1, cl, ns), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, cl, ns), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cl, nh * hp), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, nh * hp, ns), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, cl, nh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, 1, nh), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nc, cl, nh * hp), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc, nh * hp, ns), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc, cl, nh), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc, 1, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf, dtf, A2, Bf, Cf)
+
+    return (y.reshape(B, nc, cl, nh, hp),
+            st.reshape(B, nc, nh, hp, ns),
+            ecs.reshape(B, nc, cl, nh),
+            etot.reshape(B, nc, nh))

@@ -1,0 +1,60 @@
+"""jit'd SSD wrapper: Pallas intra-chunk kernel + jnp inter-chunk scan."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A_log, B_, C_, D_, *, chunk: int = 256, state=None,
+        interpret: bool | None = None):
+    """Full SSD = Pallas intra-chunk pieces + linear inter-chunk scan.
+    Returns (y (B,S,nh,hp), final_state (B,nh,hp,ns))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, nh, hp = x.shape
+    ns = B_.shape[-1]
+    cl = min(chunk, S)
+    S_orig = S
+    if S % cl:                 # pad with dt=0 tokens (state-neutral)
+        pad = cl - S % cl
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // cl
+
+    y_diag, states, exp_cs, exp_tot = ssd_chunk_call(
+        x, dt, A_log, B_, C_, chunk=chunk, interpret=interpret)
+
+    if state is None:
+        state = jnp.zeros((B, nh, hp, ns), jnp.float32)
+
+    C_c = jnp.moveaxis(C_.reshape(B, nc, cl, ns), 1, 0).astype(jnp.float32)
+    sc = jnp.moveaxis(states, 1, 0)
+    ec = jnp.moveaxis(exp_cs, 1, 0)
+    et = jnp.moveaxis(exp_tot, 1, 0)
+
+    def step(carry, inp):
+        st = carry
+        C_k, st_k, ecs_k, etot_k = inp
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", C_k, st, ecs_k)
+        st = st * etot_k[:, :, None, None] + st_k
+        return st, y_off
+
+    state, y_off = jax.lax.scan(step, state, (C_c, sc, ec, et))
+    y = jnp.moveaxis(y_diag, 1, 0) + y_off               # (nc,B,cl,nh,hp)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, nh, hp)
+    y = y + x.astype(jnp.float32) * D_.astype(jnp.float32)[None, None, :,
+                                                           None]
+    return y.astype(x.dtype)[:, :S_orig], state

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the chunked SSD from the model code."""
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_ref(x, dt, A_log, B_, C_, D_, chunk, state=None):
+    return ssd_chunked(x, dt, A_log, B_, C_, D_, chunk, state=state,
+                       return_state=True)

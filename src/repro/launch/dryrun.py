@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices. Everything else (smoke tests, benches) must see
+1 device, so this env var is set nowhere else.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    python -m repro.launch.dryrun --arch yi-34b --shape decode_32k --multi-pod
+    python -m repro.launch.dryrun --all            # subprocess per cell
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import mesh as mesh_mod
+    from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                    make_train_step, shardings_for_cell)
+    from repro.models.layers import padded_vocab
+    from repro.roofline import collective_bytes_moved, roofline_terms
+    from repro.roofline import hlo_cost
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": why}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    sh = shardings_for_cell(cfg, shape, mesh)
+    rules = sh["rules"]
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step = make_train_step(cfg, mesh, rules)
+        jitted = jax.jit(step,
+                         in_shardings=(sh["params_sh"], sh["opt_sh"],
+                                       sh["batch_sh"]),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(sh["params_abs"], sh["opt_abs"],
+                                   sh["batch_abs"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(sh["params_sh"],
+                                             sh["batch_sh"]),
+                         out_shardings=(sh["logits_sh"], sh["cache_sh"]))
+        with mesh:
+            lowered = jitted.lower(sh["params_abs"], sh["batch_abs"])
+    else:  # decode
+        step = make_serve_step(cfg)
+        scalar_sh = jax.sharding.NamedSharding(mesh,
+                                               jax.sharding.PartitionSpec())
+        jitted = jax.jit(step,
+                         in_shardings=(sh["params_sh"], sh["cache_sh"],
+                                       sh["batch_sh"]["tokens"], scalar_sh),
+                         donate_argnums=(1,))
+        pos_abs = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        with mesh:
+            lowered = jitted.lower(sh["params_abs"], sh["cache_abs"],
+                                   sh["batch_abs"]["tokens"], pos_abs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Structural analysis: XLA's cost_analysis counts while (=scan) bodies
+    # once; hlo_cost multiplies by known_trip_count (see roofline/hlo_cost).
+    report = hlo_cost.analyze(hlo)
+    records = hlo_cost.collective_records(report)
+    coll_moved, by_kind = collective_bytes_moved(records)
+
+    flops = report.dot_flops
+    bytes_acc = report.hbm_bytes
+    terms = roofline_terms(hlo_flops=flops, hlo_bytes=bytes_acc,
+                           coll_moved=coll_moved, n_chips=n_chips)
+
+    # MODEL_FLOPS bookkeeping: 6·N·D train, 2·N·D forward-only; N excludes
+    # the input-embedding gather (but the head matmul stays counted).
+    n_active = cfg.n_params(active_only=True)
+    embed_tab = padded_vocab(cfg.vocab_size) * cfg.d_model * \
+        (cfg.n_codebooks or 1)
+    n_eff = n_active - (0 if cfg.tie_embeddings else embed_tab)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_eff * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_eff * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_eff * tokens
+    model_flops_per_chip = model_flops / n_chips
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok", "tag": tag,
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_moved_per_device": coll_moved,
+        "collectives": by_kind,
+        "while_without_trip": report.while_without_trip,
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": (mem.argument_size_in_bytes +
+                               mem.output_size_in_bytes +
+                               mem.temp_size_in_bytes -
+                               mem.alias_size_in_bytes),
+        },
+        "roofline": terms,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_frac": (model_flops_per_chip / flops) if flops else 0,
+        "overrides": overrides or {},
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(out_dir,
+                          f"{arch}_{shape_name}_{result['mesh']}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def sweep(out_dir: str, multi_pod_too: bool = True, archs=None):
+    """Subprocess per cell: fresh XLA state, bounded memory."""
+    from repro.configs import cells
+    todo = []
+    for arch, shape_name, ok, why in cells(include_skipped=True):
+        if archs and arch not in archs:
+            continue
+        meshes = ["single"] + (["multi"] if multi_pod_too else [])
+        for m in meshes:
+            todo.append((arch, shape_name, m, ok, why))
+    results = []
+    for i, (arch, shape_name, m, ok, why) in enumerate(todo):
+        label = f"[{i+1}/{len(todo)}] {arch} {shape_name} {m}"
+        if not ok:
+            print(f"{label}: {why}", flush=True)
+            mesh_name = "2x16x16" if m == "multi" else "16x16"
+            fn = os.path.join(out_dir,
+                              f"{arch}_{shape_name}_{mesh_name}.json")
+            os.makedirs(out_dir, exist_ok=True)
+            with open(fn, "w") as f:
+                json.dump({"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": why}, f)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape_name, "--out", out_dir]
+        if m == "multi":
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        if r.returncode == 0:
+            print(f"{label}: ok ({dt:.0f}s)", flush=True)
+        else:
+            print(f"{label}: FAIL ({dt:.0f}s)\n{r.stdout[-2000:]}"
+                  f"\n{r.stderr[-4000:]}", flush=True)
+            results.append((arch, shape_name, m))
+    if results:
+        print(f"FAILED cells: {results}", flush=True)
+        return 1
+    print("sweep complete", flush=True)
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default="",
+                    help="comma list filter for --all")
+    ap.add_argument("--tag", default="", help="variant tag for the output")
+    ap.add_argument("--override", default="",
+                    help="cfg overrides k=v[,k=v]; ints/floats/bools parsed")
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(sweep(args.out,
+                       archs=[a for a in args.archs.split(",") if a]))
+
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    try:
+        r = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                     overrides or None, args.tag)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    print(json.dumps({k: v for k, v in r.items()
+                      if k not in ("collectives",)}, indent=1))
+    sys.exit(0 if r.get("status", "ok").startswith("ok") or
+             "skipped" in r.get("status", "") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model definitions: attention, MoE, Mamba2 SSD, and full LM assembly."""

@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality) block, pure-jnp chunked algorithm.
+
+The SSD computation is organized as a scan over sequence chunks: the
+quadratic intra-chunk part (attention-like, O(chunk²)) is computed inside
+the scan step so live memory stays O(B·chunk²·heads) instead of
+O(B·S·chunk·heads); the inter-chunk state is the scan carry — exactly the
+"recurrent outer, attention inner" duality of the paper [arXiv:2405.21060].
+
+``kernels/ssd_scan`` provides the Pallas TPU kernel for the intra-chunk
+part; this module is its jnp oracle and the default (CPU/dry-run) path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def mamba_defs(cfg, ll=()) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ns = s.d_state
+    Lax = tuple("layers" for _ in ll)
+    # zamba2 (nh=80) shards SSM heads over `model`; mamba2-130m (nh=24)
+    # does not divide the 16-wide axis -> replicated (see DESIGN.md).
+    hax = "ssm_heads" if nh % 16 == 0 else "ssm_heads_rep"
+    return {
+        "wz": ParamDef(ll + (d, di), Lax + ("embed", hax)),
+        "wx": ParamDef(ll + (d, di), Lax + ("embed", hax)),
+        "wb": ParamDef(ll + (d, ns), Lax + ("embed", "ssm_state")),
+        "wc": ParamDef(ll + (d, ns), Lax + ("embed", "ssm_state")),
+        "wdt": ParamDef(ll + (d, nh), Lax + ("embed", hax)),
+        "dt_bias": ParamDef(ll + (nh,), Lax + (hax,), init="zeros"),
+        "A_log": ParamDef(ll + (nh,), Lax + (hax,), init="ones"),
+        "D": ParamDef(ll + (nh,), Lax + (hax,), init="ones"),
+        "conv_x": ParamDef(ll + (s.d_conv, di), Lax + ("conv", hax),
+                           scale=0.5),
+        "conv_b": ParamDef(ll + (s.d_conv, ns), Lax + ("conv", "ssm_state"),
+                           scale=0.5),
+        "conv_c": ParamDef(ll + (s.d_conv, ns), Lax + ("conv", "ssm_state"),
+                           scale=0.5),
+        "norm": ParamDef(ll + (di,), Lax + (hax,), init="ones"),
+        "wo": ParamDef(ll + (di, d), Lax + (hax, "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (d_conv taps) as shifted adds — no conv primitive
+# ---------------------------------------------------------------------------
+
+def causal_conv(u, w, state=None):
+    """u: (B, S, C); w: (taps, C). state: (B, taps-1, C) history or None.
+    Returns (y, new_state)."""
+    taps = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], taps - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)              # (B, S+taps-1, C)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(taps))
+    return y, ext[:, -(taps - 1):]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A_log, B_, C_, D_, chunk: int, state=None,
+                return_state: bool = False, einsum_dtype=jnp.float32):
+    """x: (B,S,nh,hp); dt: (B,S,nh) (post-softplus); A_log: (nh,);
+    B_/C_: (B,S,ns) (single group shared by all heads); D_: (nh,).
+    state: (B,nh,hp,ns) initial inter-chunk state."""
+    B, S, nh, hp = x.shape
+    ns = B_.shape[-1]
+    cl = min(chunk, S)
+    S_orig = S
+    if S % cl:                 # pad with dt=0 tokens: no state contribution
+        pad = cl - S % cl
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // cl
+    A = -jnp.exp(A_log.astype(jnp.float32))                # (nh,)
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A                                           # (B,S,nh)
+    xdt = x.astype(jnp.float32) * dtf[..., None]
+
+    # chunked views, scan axis first
+    def chunked(t, extra=()):
+        return jnp.moveaxis(t.reshape((B, nc, cl) + t.shape[2:]), 1, 0)
+
+    dA_c = chunked(dA)                                     # (nc,B,cl,nh)
+    x_c = chunked(xdt)                                     # (nc,B,cl,nh,hp)
+    B_c = chunked(B_.astype(jnp.float32))                  # (nc,B,cl,ns)
+    C_c = chunked(C_.astype(jnp.float32))
+
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+
+    if state is None:
+        state = jnp.zeros((B, nh, hp, ns), jnp.float32)
+
+    def step(carry, inp):
+        st = carry                                         # (B,nh,hp,ns)
+        dA_k, x_k, B_k, C_k = inp
+        cs = jnp.cumsum(dA_k, axis=1)                      # (B,cl,nh)
+        # intra-chunk: y[i] += sum_{j<=i} exp(cs_i - cs_j) (C_i·B_j) xdt_j
+        seg = cs[:, :, None, :] - cs[:, None, :, :]        # (B,cl,cl,nh)
+        # mask BEFORE exp: exp of masked (positive) entries overflows to
+        # inf, and inf*0 in the backward pass is NaN
+        seg = jnp.where(tri[None, :, :, None], seg, -1e9)
+        L = jnp.exp(seg).astype(einsum_dtype)
+        sc = jnp.einsum("bin,bjn->bij", C_k.astype(einsum_dtype),
+                        B_k.astype(einsum_dtype),
+                        preferred_element_type=jnp.float32)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp",
+                            sc.astype(einsum_dtype), L,
+                            x_k.astype(einsum_dtype),
+                            preferred_element_type=jnp.float32)
+        # contribution of the carried state
+        dec_in = jnp.exp(cs)                               # (B,cl,nh)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", C_k, st, dec_in)
+        # new chunk state
+        total = cs[:, -1, :]                               # (B,nh)
+        dec_out = jnp.exp(total[:, None, :] - cs)          # (B,cl,nh)
+        st_new = jnp.einsum("bjn,bjh,bjhp->bhpn", B_k, dec_out, x_k)
+        st = st * jnp.exp(total)[:, :, None, None] + st_new
+        return st, (y_diag + y_off)
+
+    # flash-style: recompute the O(cl²) intra-chunk tensors (seg/L/att) in
+    # the backward pass instead of saving them per chunk — the L matrices
+    # are ~40% of all HBM traffic if persisted (see EXPERIMENTS §Perf)
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    state, y = jax.lax.scan(step, state, (dA_c, x_c, B_c, C_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, nh, hp)        # (B,S,nh,hp)
+    y = y + x.astype(jnp.float32) * D_.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)[:, :S_orig]
+    return (y, state) if return_state else y
+
+
+def ssd_decode_step(x, dt, A_log, B_, C_, D_, state):
+    """Single-token recurrence. x: (B,nh,hp); dt: (B,nh); B_/C_: (B,ns);
+    state: (B,nh,hp,ns) → (y, new_state)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A)                                  # (B,nh)
+    xf = x.astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dtf[..., None],
+                     B_.astype(jnp.float32))
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_.astype(jnp.float32))
+    y = y + xf * D_.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_block(cfg, p, u, dtype, *, state=None, conv_state=None,
+                return_state: bool = False, use_pallas: bool = False,
+                mesh=None, rules=None):
+    """u: (B, S, D). ``state``/``conv_state`` enable decode-style chunked
+    streaming; None for training."""
+    s = cfg.ssm
+    B, S, D = u.shape
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    ns = s.d_state
+
+    z = jnp.einsum("bsd,de->bse", u, p["wz"].astype(dtype))
+    xs = jnp.einsum("bsd,de->bse", u, p["wx"].astype(dtype))
+    bs = jnp.einsum("bsd,dn->bsn", u, p["wb"].astype(dtype))
+    cs = jnp.einsum("bsd,dn->bsn", u, p["wc"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p["wdt"].astype(dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    cx = cb = cc = None
+    if conv_state is not None:
+        cx, cb, cc = conv_state
+    xs, cx = causal_conv(xs, p["conv_x"].astype(dtype), cx)
+    bs, cb = causal_conv(bs, p["conv_b"].astype(dtype), cb)
+    cs2, cc = causal_conv(cs, p["conv_c"].astype(dtype), cc)
+    xs = jax.nn.silu(xs)
+    bs = jax.nn.silu(bs)
+    cs2 = jax.nn.silu(cs2)
+
+    if mesh is not None:
+        from repro.models.partitioning import constrain
+        hax = "ssm_heads" if nh % 16 == 0 else "ssm_heads_rep"
+        xs = constrain(xs, mesh, "batch", None, hax, rules=rules)
+        z = constrain(z, mesh, "batch", None, hax, rules=rules)
+        dt = constrain(dt, mesh, "batch", None, hax, rules=rules)
+        bs = constrain(bs, mesh, "batch", None, None, rules=rules)
+        cs2 = constrain(cs2, mesh, "batch", None, None, rules=rules)
+    xh = xs.reshape(B, S, nh, s.headdim)
+    chunk = cfg.ssm_chunk or s.chunk
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, new_state = ssd_ops.ssd(xh, dt, p["A_log"], bs, cs2, p["D"],
+                                   chunk=chunk, state=state)
+    else:
+        y, new_state = ssd_chunked(
+            xh, dt, p["A_log"], bs, cs2, p["D"], chunk, state=state,
+            return_state=True,
+            einsum_dtype=jnp.bfloat16 if cfg.ssm_bf16 else jnp.float32)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dtype))
+    if return_state:
+        return out, new_state, (cx, cb, cc)
+    return out
+
+
+def mamba_decode_block(cfg, p, u, state, conv_state, dtype):
+    """u: (B, 1, D) single step."""
+    out, new_state, new_conv = mamba_block(
+        cfg, p, u, dtype, state=state, conv_state=conv_state,
+        return_state=True)
+    return out, new_state, new_conv

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded
+scatter/gather dispatch (GShard-style, but index-based instead of the
+one-hot-einsum dispatch, which would cost more FLOPs than the experts
+themselves at these shapes).
+
+Token flow is the device-side incarnation of the paper's *shuffle* use
+case: tokens are partitioned by the routing function and repartitioned to
+their experts — an all-to-all when experts are sharded over ``model``.
+
+Expert splitting: when n_experts doesn't divide the model axis (Mixtral:
+8 experts over 16 shards), each expert is split into ``split`` sub-experts
+of d_ff/split hidden channels. For gated MLPs this is EXACT:
+   w2ᵀ(silu(x·w1) ⊙ (x·w3)) = Σ_half w2_hᵀ(silu(x·w1_h) ⊙ (x·w3_h))
+because the gating is per-hidden-channel. Every token is dispatched to all
+sub-experts of its routed expert with the same gate; the combine sums the
+partial FFN outputs. This keeps a single clean expert-parallel layout
+(all-to-all dispatch) for every MoE arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+# Production model-axis width (see launch/mesh.py).
+MODEL_AXIS = 16
+
+
+def expert_split(cfg) -> int:
+    E = cfg.moe.n_experts
+    return 1 if E % MODEL_AXIS == 0 else MODEL_AXIS // E
+
+
+def moe_defs(cfg, ll=()) -> dict:
+    m = cfg.moe
+    split = expert_split(cfg)
+    d, f, E = cfg.d_model, m.d_ff_expert // split, m.n_experts * split
+    Lax = tuple("layers" for _ in ll)
+    if cfg.moe_fsdp_out:        # §Perf: no weight gathers (see base.py)
+        w_ax = (("experts", None, "expert_ffn"),
+                ("experts", None, "expert_ffn"),
+                ("experts", "expert_ffn", None))
+    else:
+        w_ax = (("experts", "embed", None),
+                ("experts", "embed", None),
+                ("experts", None, "embed"))
+    defs = {
+        "router": ParamDef(ll + (d, m.n_experts), Lax + ("embed", None),
+                           scale=0.1),
+        "w1": ParamDef(ll + (E, d, f), Lax + w_ax[0]),
+        "w3": ParamDef(ll + (E, d, f), Lax + w_ax[1]),
+        "w2": ParamDef(ll + (E, f, d), Lax + w_ax[2]),
+    }
+    if m.n_shared:
+        fs = m.d_ff_expert * m.n_shared
+        defs["shared_w1"] = ParamDef(ll + (d, fs), Lax + ("embed", "mlp"))
+        defs["shared_w3"] = ParamDef(ll + (d, fs), Lax + ("embed", "mlp"))
+        defs["shared_w2"] = ParamDef(ll + (fs, d), Lax + ("mlp", "embed"))
+    return defs
+
+
+def capacity(cfg, seq_len: int) -> int:
+    m = cfg.moe
+    c = int(seq_len * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, min(((c + 7) // 8) * 8, seq_len * m.top_k))
+
+
+def moe_ffn(cfg, p, x, dtype, mesh=None, rules=None):
+    """x: (B, S, D) → (y, aux_loss).
+
+    GShard-style *group-local* dispatch: the sequence is split into
+    MODEL_AXIS groups aligned with the sequence-parallel shards, so
+    routing, position-in-expert (cumsum) and capacity are computed locally
+    per shard. The dispatch buffers are then resharded from group-sharded
+    to expert-sharded — a single constraint flip that GSPMD lowers as a
+    true all-to-all (the paper's network shuffle, §4). The combine is the
+    mirror-image all-to-all back. Capacity-dropped tokens pass through the
+    residual (standard GShard behaviour).
+    """
+    from repro.models.partitioning import constrain
+
+    def c(t, *logical):
+        if mesh is None:
+            return t
+        return constrain(t, mesh, *logical, rules=rules)
+
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    split = expert_split(cfg)
+    Ee, Ke = E * split, K * split
+    G = MODEL_AXIS if (S % MODEL_AXIS == 0 and S >= 64 * MODEL_AXIS) else 1
+    Sg = S // G
+    C = capacity(cfg, Sg)
+
+    xg = c(x.reshape(B, G, Sg, D), "batch", "act_seq", None, None)
+
+    logits = jnp.einsum("bgsd,de->bgse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, K)                   # (B,G,Sg,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if split > 1:  # duplicate each assignment to all sub-experts
+        ids_e = (ids[..., None] * split +
+                 jnp.arange(split)[None, None, None, None]
+                 ).reshape(B, G, Sg, Ke)
+        gates_e = jnp.repeat(gates, split, axis=-1)
+    else:
+        ids_e, gates_e = ids, gates
+
+    # group-local position of each (token, k) slot within its expert
+    onehot = jax.nn.one_hot(ids_e.reshape(B, G, Sg * Ke), Ee,
+                            dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=2) - onehot)            # exclusive count
+    pos = (pos * onehot).sum(-1)                           # (B,G,Sg*Ke)
+    eid = ids_e.reshape(B, G, Sg * Ke)
+    keep = pos < C
+    slot = eid * C + jnp.minimum(pos, C - 1)               # (B,G,Sg*Ke)
+
+    x_flat = jnp.repeat(xg, Ke, axis=2)                    # (B,G,Sg*Ke,D)
+
+    def scatter_row(xr, sr, kr):
+        idx = jnp.where(kr, sr, Ee * C)                    # OOB -> dropped
+        return jnp.zeros((Ee * C, D), xr.dtype).at[idx].add(
+            xr * kr[:, None].astype(xr.dtype), mode="drop")
+
+    x_e = jax.vmap(jax.vmap(scatter_row))(x_flat, slot, keep)
+    x_e = c(x_e.reshape(B, G, Ee, C, D),
+            "batch", "act_seq", None, None, None)          # group-sharded
+
+    use_sm = (cfg.moe_impl == "shard_map" and mesh is not None and
+              G == MODEL_AXIS and "model" in mesh.axis_names)
+    if use_sm:
+        # ---- §Perf lever: EXPLICIT all-to-all (the paper's shuffle) ----
+        # instead of GSPMD constraint-flip resharding
+        from repro.distributed.a2a import moe_dispatch_combine
+        batch_axes = tuple(rules.get("batch", ("data",))) if rules else             ("data",)
+        dispatch, combine = moe_dispatch_combine(mesh, batch_axes)
+        x_e = dispatch(x_e)
+    else:
+        # dispatch all-to-all: group-sharded -> expert-sharded (GSPMD)
+        x_e = c(x_e, "batch", None, "experts", None, None)
+
+    h = jnp.einsum("bgecd,edf->bgecf", x_e, p["w1"].astype(dtype))
+    g_ = jnp.einsum("bgecd,edf->bgecf", x_e, p["w3"].astype(dtype))
+    y_e = jnp.einsum("bgecf,efd->bgecd", jax.nn.silu(h) * g_,
+                     p["w2"].astype(dtype))
+    if use_sm:
+        y_e = c(y_e, "batch", None, "experts", None, None)
+        y_e = combine(y_e)
+    else:
+        # combine all-to-all: expert-sharded -> group-sharded (GSPMD)
+        y_e = c(y_e, "batch", None, "experts", None, None)
+        y_e = c(y_e, "batch", "act_seq", None, None, None)
+    y_flat = y_e.reshape(B, G, Ee * C, D)
+
+    y_tok = jax.vmap(jax.vmap(lambda yr, sr: yr[sr]))(y_flat, slot)
+    w = (gates_e.reshape(B, G, Sg * Ke) * keep).astype(dtype)
+    y = (y_tok * w[..., None]).reshape(B, G, Sg, Ke, D).sum(3)
+    y = c(y.reshape(B, S, D), "batch", "act_seq", None)
+
+    if m.n_shared:
+        hs = jnp.einsum("bsd,df->bsf", x, p["shared_w1"].astype(dtype))
+        gs = jnp.einsum("bsd,df->bsf", x, p["shared_w3"].astype(dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(hs) * gs,
+                           p["shared_w2"].astype(dtype))
+
+    # load-balance auxiliary loss (Switch/GShard form, on the true experts)
+    frac_src = onehot.reshape(B, G, Sg * Ke, E, split).sum(-1) \
+        if split > 1 else onehot
+    frac = (frac_src * keep[..., None]).astype(jnp.float32).mean(2)
+    imp = probs.mean(2)                                    # (B,G,E)
+    aux = E * (frac * imp).sum(-1).mean() * m.router_aux_weight
+    return y, aux

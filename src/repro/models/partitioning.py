@@ -1,0 +1,104 @@
+"""Logical-axis → mesh-axis partitioning rules.
+
+Params and activations are annotated with *logical* axis names; a rule set
+maps them to physical mesh axes.  One rule table serves the single-pod
+``("data","model")`` mesh and the multi-pod ``("pod","data","model")`` mesh:
+axes absent from the mesh are dropped automatically.
+
+Key layout decisions (see DESIGN.md §Distribution):
+
+* ``embed``   → ``data`` (+``pod``): FSDP/ZeRO-3-style parameter sharding.
+* ``heads`` / ``mlp`` / ``vocab`` → ``model``: tensor parallelism.
+* ``kv_heads`` → replicated. GQA archs have 1–8 KV heads, which does not
+  divide the 16-wide model axis; replicating the (small) KV projections
+  avoids GSPMD padding waste and keeps every KV head local to its
+  query-head group.
+* ``experts`` → ``model`` when n_experts divides it (DeepSeek-V2: 64),
+  else expert-tensor-parallel via ``expert_mlp`` → ``model`` (Mixtral: 8).
+* ``act_seq`` → ``model``: sequence-parallel residual stream between
+  blocks (cuts saved-activation memory by the model-axis width).
+* ``kv_seq``  → ``model`` (decode KV caches); for batch-1 long-context
+  decode the batch axes are idle so the KV sequence additionally spreads
+  over ``pod``+``data`` (rule ``kv_seq_wide``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of candidate mesh axes (joined, in order, if present)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "act_seq": ("model",),
+    "embed": ("data",),
+    "embed_wide": ("pod", "data"),   # used for FSDP of params in multi-pod
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),                  # replicated (see module docstring)
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": ("model",),
+    "expert_ffn": ("data",),   # output-dim FSDP for expert weights (§Perf)
+    "kv_seq": ("model",),
+    "kv_seq_wide": ("pod", "data", "model"),
+    "layers": (),
+    "conv": (),
+    "ssm_heads": ("model",),
+    "ssm_heads_rep": (),             # mamba2-130m: 24 heads don't divide 16
+    "ssm_state": (),
+    None: (),
+}
+
+
+def spec_for(logical: Sequence[Optional[str]], mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    """Build a PartitionSpec for a tuple of logical axis names."""
+    rules = rules or DEFAULT_RULES
+    names = set(mesh.axis_names)
+    out = []
+    for ax in logical:
+        cand = tuple(a for a in rules.get(ax, ()) if a in names)
+        out.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    return P(*out)
+
+
+def sharding_for(logical, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, mesh, rules))
+
+
+def constrain(x, mesh: Mesh, *logical, rules=None):
+    """with_sharding_constraint by logical axes (no-op outside a mesh ctx)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(logical, mesh, rules)))
+
+
+def batch_axes_for(global_batch: int, mesh: Mesh) -> tuple:
+    """Pick the largest prefix of (pod, data) that divides the batch.
+
+    ``long_500k`` has batch 1 → batch is replicated and the KV sequence
+    picks up the idle axes instead (see rules ``kv_seq_wide``).
+    """
+    axes = []
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            sz = mesh.shape[a]
+            if global_batch % (n * sz) == 0:
+                axes.append(a)
+                n *= sz
+    return tuple(axes)
+
+
+def rules_for(mesh: Mesh, global_batch: int, *, wide_kv: bool = False) -> dict:
+    """Shape-aware rule table (handles batch-1 decode + multi-pod FSDP)."""
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = batch_axes_for(global_batch, mesh)
+    if "pod" in mesh.axis_names:
+        rules["embed"] = ("pod", "data")  # FSDP over both replica axes
+    if wide_kv and not rules["batch"]:
+        rules["kv_seq"] = tuple(a for a in ("pod", "data", "model")
+                                if a in mesh.axis_names)
+    return rules

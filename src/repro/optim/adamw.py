@@ -1,0 +1,72 @@
+"""AdamW with cosine schedule and gradient clipping (no external deps).
+
+Optimizer state shards exactly like the parameters (the specs tree is
+reused leaf-for-leaf), which is what makes the FSDP layout hold for the
+full fp32 m/v state of the 34–141B archs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: dict                  # like params, fp32
+    v: dict                  # like params, fp32
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    warm = peak_lr * (step + 1) / max(1, warmup)
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (u + decay * p.astype(jnp.float32))
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_m, new_v), gnorm

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (collective_bytes_moved,
+                                     parse_hlo_collectives, roofline_terms)

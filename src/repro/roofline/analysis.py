@@ -1,0 +1,129 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes accessed;
+collective traffic is NOT in cost_analysis, so we parse the post-SPMD
+optimized HLO (``compiled.as_text()``) and sum the bytes moved by every
+collective op, converted to per-device *link traffic* with the standard
+ring-algorithm formulas:
+
+    all-gather          out_bytes × (n-1)/n
+    reduce-scatter      out_bytes × (n-1)          (operand = out × n)
+    all-reduce          2 × bytes × (n-1)/n        (RS + AG phases)
+    all-to-all          bytes × (n-1)/n
+    collective-permute  bytes
+
+where n is the replica-group size parsed from the op's attributes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# `f32[8,128]` or scalar `f32[]`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_collectives(hlo_text: str) -> List[dict]:
+    """One record per collective op instance in the module."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        result_txt, kind, start = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        size = _shape_bytes(result_txt)
+        # group size
+        n = 1
+        gm = _GROUPS_ITOA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                n = len(gl.group(1).split(","))
+            elif kind == "collective-permute":
+                n = 2
+        out.append({"kind": kind, "bytes": size, "group": n})
+    return out
+
+
+def collective_bytes_moved(records: List[dict]) -> Tuple[float, Dict]:
+    """Per-device link traffic (bytes) using ring formulas; returns
+    (total, breakdown by kind)."""
+    by_kind: Dict[str, dict] = {}
+    total = 0.0
+    for r in records:
+        n, b, k = max(2, r["group"]), r["bytes"], r["kind"]
+        if k == "all-gather":
+            moved = b * (n - 1) / n
+        elif k == "reduce-scatter":
+            moved = b * (n - 1)
+        elif k == "all-reduce":
+            moved = 2 * b * (n - 1) / n
+        elif k == "all-to-all":
+            moved = b * (n - 1) / n
+        else:  # collective-permute
+            moved = b
+        total += moved
+        agg = by_kind.setdefault(k, {"count": 0, "bytes": 0.0, "moved": 0.0})
+        agg["count"] += 1
+        agg["bytes"] += b
+        agg["moved"] += moved
+    return total, by_kind
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   coll_moved: float, n_chips: int,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9, flops_per_device: bool = True):
+    """Three roofline terms in seconds (per step).
+
+    ``cost_analysis`` on an SPMD module reports per-device numbers (one
+    partitioned program), verified in tests/test_roofline.py.
+    """
+    if not flops_per_device:
+        hlo_flops /= n_chips
+        hlo_bytes /= n_chips
+    t_comp = hlo_flops / peak_flops
+    t_mem = hlo_bytes / hbm_bw
+    t_coll = coll_moved / ici_bw
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+        "t_bound_s": dom[0],
+    }

@@ -1,0 +1,378 @@
+"""Structural cost analysis of post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — useless for
+scan-over-layers models (a 95-layer net reports ~1 layer of FLOPs). This
+module re-derives the costs from the compiled artifact itself:
+
+* parse the module into computations + a call graph,
+* multiply ``while`` bodies by their ``known_trip_count`` backend config,
+* FLOPs: 2 · prod(result dims) · prod(lhs contracting dims) per ``dot``
+  (matmul-dominated models; elementwise FLOPs are ignored and recorded as
+  such in EXPERIMENTS.md),
+* HBM bytes: fusion-boundary traffic — every non-free instruction and
+  every fusion counts operand + result bytes once; intra-fusion
+  intermediates are free (which is what fusion means on TPU),
+* collectives: per-op records (kind, bytes, group size) × trip count,
+  fed to the ring formulas in ``analysis.py``.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_TAIL_RE = re.compile(r"\s*([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\D+(\d+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no HBM bytes of their own
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "domain",
+             "opt-barrier"}
+
+
+def _shape_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_text: str) -> List[int]:
+    m = _SHAPE_RE.search(type_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Instr:
+    name: str
+    type_text: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class CostReport:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[dict] = field(default_factory=list)
+    while_without_trip: int = 0
+
+    def scaled(self, mult: float) -> "CostReport":
+        return CostReport(
+            self.dot_flops * mult, self.hbm_bytes * mult,
+            [dict(c, count_mult=mult * c.get("count_mult", 1.0))
+             for c in self.collectives],
+            self.while_without_trip)
+
+    def add(self, other: "CostReport") -> None:
+        self.dot_flops += other.dot_flops
+        self.hbm_bytes += other.hbm_bytes
+        self.collectives.extend(other.collectives)
+        self.while_without_trip += other.while_without_trip
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):          # tuple type (may contain /*index=k*/)
+        depth = 0
+        idx = 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_text, tail = rest[:idx + 1], rest[idx + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_text, tail = rest[:sp], rest[sp:]
+    m = _OP_TAIL_RE.match(tail)
+    if not m:
+        return None
+    return Instr(name, type_text, m.group(1), m.group(2))
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            # computation header: `[ENTRY ]%name (...) -> type {`
+            if stripped.endswith("{") and "->" in stripped and \
+                    " = " not in stripped.split("->")[0]:
+                tok = stripped.split()[0]
+                is_entry = tok == "ENTRY"
+                if is_entry:
+                    tok = stripped.split()[1]
+                name = tok.lstrip("%")
+                cur = Computation(name)
+                if is_entry:
+                    entry = name
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.symtab[ins.name] = ins.type_text
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    ops = _OPERAND_RE.findall(ins.rest)
+    if not ops:
+        return 0.0
+    lhs_dims = _shape_dims(comp.symtab.get(ops[0], ""))
+    cm = _CONTRACT_RE.search(ins.rest)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    out = 1
+    for d in _shape_dims(ins.type_text):
+        out *= d
+    return 2.0 * out * contract
+
+
+def _collective_record(ins: Instr) -> dict:
+    kind = ins.op.replace("-start", "")
+    shapes = _SHAPE_RE.findall(ins.type_text)
+    sizes = []
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    if not sizes:
+        size = 0
+    elif len(sizes) == 1:
+        size = sizes[0]
+    else:  # async -start tuple (operand, dest): pick the semantic result
+        size = max(sizes) if kind == "all-gather" else \
+            min(sizes) if kind == "reduce-scatter" else sizes[-1]
+    n = 1
+    gm = _GROUPS_ITOA_RE.search(ins.rest)
+    if gm:
+        n = int(gm.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(ins.rest)
+        if gl:
+            n = len(gl.group(1).split(","))
+        elif kind == "collective-permute":
+            n = 2
+    return {"kind": kind, "bytes": size, "group": n, "count_mult": 1.0}
+
+
+def _operand_names(ins: Instr) -> List[str]:
+    # operands appear before the first `)`; attributes (calls=, body=…) after
+    head = ins.rest.split(")")[0]
+    return _OPERAND_RE.findall(head)
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> float:
+    """HBM traffic of one instruction. Slicing ops only touch the slice."""
+    res = _shape_bytes(ins.type_text)
+    if ins.op in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * res          # read slice + write result
+    if ins.op == "dynamic-update-slice":
+        # in-place: read+write of the update region (operand 1)
+        ops = _operand_names(ins)
+        upd = _shape_bytes(comp.symtab.get(ops[1], "")) if len(ops) > 1 \
+            else res
+        return 2.0 * upd
+    total = float(res)
+    for op_name in _operand_names(ins):
+        t = comp.symtab.get(op_name)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: Dict[str, "Computation"]) -> float:
+    """Fusion boundary traffic with slice/in-place awareness:
+
+    * a fusion parameter consumed ONLY by dynamic-slice/gather inside the
+      fused computation is charged at the slice size (XLA fuses the read);
+    * a parameter that is ONLY the in-place target (operand 0) of
+      dynamic-update-slice is charged at the update size;
+    * a fusion whose root is a DUS (or a tuple of DUSes) writes only the
+      update region(s), not the whole buffer.
+    """
+    cm = _CALLS_RE.search(ins.rest)
+    fused = comps.get(cm.group(1)) if cm else None
+    operands = _operand_names(ins)
+    if fused is None:
+        total = float(_shape_bytes(ins.type_text))
+        for op_name in operands:
+            t = comp.symtab.get(op_name)
+            if t:
+                total += _shape_bytes(t)
+        return total
+
+    def _dus_update_bytes(dus: Instr) -> float:
+        ops = _OPERAND_RE.findall(dus.rest.split(")")[0])
+        if len(ops) > 1 and ops[1] in fused.symtab:
+            return float(_shape_bytes(fused.symtab[ops[1]]))
+        return float(_shape_bytes(dus.type_text))
+
+    # --- output side ---
+    root = fused.instrs[-1] if fused.instrs else None
+    if root is not None and root.op == "dynamic-update-slice":
+        total = _dus_update_bytes(root)
+    elif root is not None and root.op == "tuple":
+        total = 0.0
+        for op_name in _OPERAND_RE.findall(root.rest.split(")")[0]):
+            d = next((i for i in fused.instrs if i.name == op_name), None)
+            if d is not None and d.op == "dynamic-update-slice":
+                total += _dus_update_bytes(d)
+            elif d is not None:
+                total += float(_shape_bytes(d.type_text))
+    else:
+        total = float(_shape_bytes(ins.type_text))
+
+    # --- input side: param index -> uses inside the fused computation ---
+    params = [i for i in fused.instrs if i.op == "parameter"]
+    for pos, op_name in enumerate(operands):
+        t = comp.symtab.get(op_name)
+        if not t:
+            continue
+        full = _shape_bytes(t)
+        pname = params[pos].name if pos < len(params) else None
+        if pname is None:
+            total += full
+            continue
+        charged = 0.0
+        degraded = False
+        uses = [i for i in fused.instrs
+                if pname in _OPERAND_RE.findall(i.rest.split(")")[0])]
+        for u in uses:
+            if u.op in ("dynamic-slice", "gather", "slice"):
+                charged += _shape_bytes(u.type_text)
+            elif u.op == "dynamic-update-slice":
+                u_ops = _OPERAND_RE.findall(u.rest.split(")")[0])
+                if u_ops and u_ops[0] == pname:
+                    charged += 0.0        # in-place target: free pass-through
+                else:
+                    degraded = True
+            else:
+                degraded = True
+        total += full if (degraded or not uses) else charged
+    return total
+
+
+def analyze(hlo_text: str) -> CostReport:
+    comps, entry = parse_module(hlo_text)
+    memo: Dict[str, CostReport] = {}
+
+    def cost_of(name: str, depth: int = 0) -> CostReport:
+        if name in memo:
+            return memo[name]
+        rep = CostReport()
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return rep
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                rep.dot_flops += _dot_flops(ins, comp)
+                rep.hbm_bytes += _instr_bytes(ins, comp)
+            elif any(op.startswith(k) for k in _COLL_KINDS):
+                if op.endswith("-done"):
+                    continue
+                rep.collectives.append(_collective_record(ins))
+                rep.hbm_bytes += _instr_bytes(ins, comp)
+            elif op == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trips = float(tm.group(1)) if tm else 1.0
+                if not tm:
+                    rep.while_without_trip += 1
+                for target in filter(None,
+                                     [body.group(1) if body else None,
+                                      cond.group(1) if cond else None]):
+                    rep.add(cost_of(target, depth + 1).scaled(trips))
+            elif op == "fusion":
+                rep.hbm_bytes += _fusion_bytes(ins, comp, comps)
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:  # dots/collectives inside fusions still count
+                    sub = cost_of(cm.group(1), depth + 1)
+                    rep.dot_flops += sub.dot_flops
+                    rep.collectives.extend(sub.collectives)
+                    rep.while_without_trip += sub.while_without_trip
+            elif op in ("call", "async-start", "custom-call"):
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    rep.add(cost_of(cm.group(1), depth + 1))
+                else:
+                    rep.hbm_bytes += _instr_bytes(ins, comp)
+            elif op in _FREE_OPS:
+                continue
+            else:
+                rep.hbm_bytes += _instr_bytes(ins, comp)
+        memo[name] = rep
+        return rep
+
+    return cost_of(entry)
+
+
+def collective_records(report: CostReport) -> List[dict]:
+    return [{"kind": c["kind"], "bytes": c["bytes"] * c.get("count_mult", 1),
+             "group": c["group"]} for c in report.collectives]

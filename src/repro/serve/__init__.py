@@ -1,0 +1,2 @@
+from repro.serve.loop import ServeLoop
+from repro.serve.kv_paging import KVPager

@@ -1,0 +1,53 @@
+"""Batched serving loop: prefill once, decode with a jitted serve_step
+(donated cache)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import lm
+
+
+class ServeLoop:
+    def __init__(self, cfg, params, *, max_len: int = 256,
+                 mesh=None, rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
+        self.step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    def generate(self, prompt_tokens, n_new: int):
+        """prompt_tokens: (B, S0[,K]) int32. Greedy decode n_new tokens."""
+        cfg = self.cfg
+        B, S0 = prompt_tokens.shape[0], prompt_tokens.shape[1]
+        batch = {"tokens": jnp.asarray(prompt_tokens, jnp.int32)}
+        logits, cache = self.prefill(self.params, batch)
+
+        # prefill cache is sized S0; decode needs room for n_new more
+        full = lm.init_cache(cfg, self.max_len, B)
+        for k in cache:
+            if cache[k].shape == full[k].shape:
+                full[k] = cache[k]
+            else:                     # grow the seq dim
+                sl = tuple(slice(0, s) for s in cache[k].shape)
+                full[k] = full[k].at[sl].set(cache[k])
+        cache = full
+
+        nxt = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+        if cfg.n_codebooks:
+            nxt = nxt[:, None, :]
+        else:
+            nxt = nxt[:, None]
+        out = [nxt]
+        pos = S0
+        for _ in range(n_new - 1):
+            nxt, cache = self.step(self.params, cache, nxt,
+                                   jnp.int32(pos))
+            out.append(nxt)
+            pos += 1
+        return jnp.concatenate(out, axis=1)

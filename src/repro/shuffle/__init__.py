@@ -1,0 +1,1 @@
+from repro.shuffle.sim import ShuffleConfig, ShuffleSim

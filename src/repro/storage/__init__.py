@@ -1,0 +1,1 @@
+from repro.storage.btree import BTree, bulk_load

@@ -1,0 +1,146 @@
+"""Storage-engine assembly: the paper's Fig. 5 design ladder as a config.
+
+Each ``EngineConfig`` names one rung:
+
+    posix        synchronous, 1 outstanding I/O (pread/pwrite equivalent)
+    io_uring     same, but through the ring (paper: "when it does not help")
+    +BatchEvict  batched eviction writes
+    +Fibers      asynchronous transaction execution (N fibers)
+    +BatchSubmit adaptive batched read submission
+    +RegBufs     registered buffers
+    +Passthru    NVMe passthrough
+    +IOPoll      completion polling
+    +SQPoll      submission polling (dedicated core)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.bufferpool import BufferPool, PoolConfig
+from repro.core import (AdaptiveBatcher, EagerSubmit, FiberScheduler,
+                        IoUring, NVMeSpec, SetupFlags, Timeline)
+from repro.core.backends import SimDisk
+from repro.storage.btree import BTree, bulk_load
+
+
+@dataclass
+class EngineConfig:
+    name: str = "+BatchSubmit"
+    n_fibers: int = 128
+    batch_evict: bool = True
+    adaptive_batch: bool = True
+    fixed_bufs: bool = False
+    passthrough: bool = False
+    iopoll: bool = False
+    sqpoll: bool = False
+    pool_frames: int = 8192
+    page_size: int = 4096
+    value_size: int = 120
+    evict_batch: int = 16
+
+    @staticmethod
+    def ladder():
+        """The paper's incremental configurations (Fig. 5), in order."""
+        base = dict(pool_frames=8192)
+        return [
+            EngineConfig("posix", n_fibers=1, batch_evict=False,
+                         adaptive_batch=False, **base),
+            EngineConfig("io_uring", n_fibers=1, batch_evict=False,
+                         adaptive_batch=False, **base),
+            EngineConfig("+BatchEvict", n_fibers=1, batch_evict=True,
+                         adaptive_batch=False, **base),
+            EngineConfig("+Fibers", n_fibers=128, batch_evict=True,
+                         adaptive_batch=False, **base),
+            EngineConfig("+BatchSubmit", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, **base),
+            EngineConfig("+RegBufs", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True, **base),
+            EngineConfig("+Passthru", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         passthrough=True, **base),
+            EngineConfig("+IOPoll", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         passthrough=True, iopoll=True, **base),
+            EngineConfig("+SQPoll", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         passthrough=True, iopoll=True, sqpoll=True,
+                         **base),
+        ]
+
+
+class StorageEngine:
+    """Timeline + ring + pool + B-tree, wired per EngineConfig."""
+
+    def __init__(self, cfg: EngineConfig, *, n_tuples: int = 200_000,
+                 spec: Optional[NVMeSpec] = None, seed: int = 0):
+        self.cfg = cfg
+        self.tl = Timeline()
+        setup = SetupFlags.SINGLE_ISSUER | SetupFlags.DEFER_TASKRUN
+        if cfg.iopoll:
+            setup |= SetupFlags.IOPOLL
+        if cfg.sqpoll:
+            setup |= SetupFlags.SQPOLL
+        self.ring = IoUring(self.tl, sq_depth=512, setup=setup)
+
+        # data: n_tuples of (int64 key, value_size bytes)
+        keys = np.arange(n_tuples, dtype=np.int64)
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(0, 256, (n_tuples, cfg.value_size),
+                            dtype=np.uint8)
+        from repro.storage.btree import leaf_fanout
+        est_pages = int(n_tuples / max(1, int(
+            leaf_fanout(cfg.page_size, cfg.value_size) * 0.8)) * 1.3) + 64
+        disk = SimDisk(self.tl, est_pages * cfg.page_size * 2,
+                       spec=spec or NVMeSpec(),
+                       filesystem=not cfg.passthrough)
+        self.disk = disk
+        self.ring.register_device(3, disk)
+        root, next_pid = bulk_load(disk.image, keys, vals,
+                                   page_size=cfg.page_size,
+                                   value_size=cfg.value_size)
+        self.n_pages = next_pid
+        self.pool = BufferPool(self.ring, PoolConfig(
+            n_frames=cfg.pool_frames, page_size=cfg.page_size,
+            batch_evict=cfg.batch_evict, evict_batch=cfg.evict_batch,
+            fixed_bufs=cfg.fixed_bufs, passthrough=cfg.passthrough, fd=3))
+        self.tree = BTree(self.pool, root, next_pid,
+                          value_size=cfg.value_size)
+        policy = AdaptiveBatcher() if cfg.adaptive_batch else EagerSubmit()
+        self.sched = FiberScheduler(self.ring, policy=policy)
+        self.n_tuples = n_tuples
+
+    def run_fibers(self, make_txn, n_txns: int) -> dict:
+        """Run n_txns transactions across cfg.n_fibers worker fibers.
+        ``make_txn(rng)`` returns a fiber generator for one transaction."""
+        rng = np.random.default_rng(1234)
+        counter = {"done": 0}
+
+        def worker():
+            while counter["done"] < n_txns:
+                counter["done"] += 1
+                yield from make_txn(rng)
+
+        t0 = self.tl.now
+        for _ in range(self.cfg.n_fibers):
+            self.sched.spawn(worker())
+        self.sched.run()
+        dt = self.tl.now - t0
+        return {
+            "config": self.cfg.name,
+            "txns": counter["done"],
+            "sim_seconds": dt,
+            "tps": counter["done"] / dt if dt > 0 else float("inf"),
+            "faults": self.pool.faults,
+            "hits": self.pool.hits,
+            "writebacks": self.pool.writebacks,
+            "enters": self.ring.stats.enters,
+            "batch_eff": self.ring.stats.batch_efficiency(),
+            "worker_fallbacks": self.ring.stats.worker_fallbacks,
+            "bounce_mb": self.ring.stats.bounce_bytes_copied / 1e6,
+            "app_cpu_s": self.ring.stats.cpu_seconds_app,
+            "sqpoll_cpu_s": self.ring.stats.cpu_seconds_sqpoll,
+        }

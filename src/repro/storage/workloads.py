@@ -1,0 +1,129 @@
+"""YCSB and TPC-C-lite transaction generators (paper §3.2).
+
+Scaled down from the paper's 10M tuples / 1 GB pool, keeping the SAME
+pool:data ratio (~30%) so the ~70% page-fault probability under uniform
+access carries over. The CPU cost of transaction logic is charged
+explicitly with the paper's measured constant (c_tx = 8 264 cycles).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perfmodel import PAPER_C_TX
+
+C_TX_S = PAPER_C_TX / 3.7e9          # transaction logic (in-memory part)
+
+
+def ycsb_update_txn(engine, rng):
+    """100% uniform single-tuple updates (the paper's YCSB config)."""
+    key = int(rng.integers(0, engine.n_tuples))
+    val = bytes(engine.cfg.value_size)
+    engine.tl.run_until(engine.tl.now + C_TX_S)   # charge tx logic
+    ok = yield from engine.tree.update(key, val)
+    assert ok, f"missing key {key}"
+
+
+def ycsb_read_txn(engine, rng):
+    key = int(rng.integers(0, engine.n_tuples))
+    engine.tl.run_until(engine.tl.now + C_TX_S)
+    v = yield from engine.tree.lookup(key)
+    assert v is not None
+
+
+# ---------------------------------------------------------------------------
+# TPC-C-lite
+# ---------------------------------------------------------------------------
+
+class TPCCLite:
+    """Scaled-down TPC-C mix over the B-tree engine.
+
+    Key space: one tree holding warehouse/customer/stock/order rows in
+    disjoint key ranges. new-order touches 1 customer + 5–15 stock rows
+    (update) + 1 order insert; payment updates warehouse + customer.
+    1 warehouse ≈ in-memory (hot set < pool), 100 warehouses ≈
+    out-of-memory — the paper's two regimes.
+    """
+
+    ITEMS_PER_WH = 20_000
+    CUST_PER_WH = 3_000
+
+    def __init__(self, engine, n_warehouses: int):
+        self.e = engine
+        self.W = n_warehouses
+        self.order_seq = engine.n_tuples + 1_000_000
+
+    def key_stock(self, w, i):
+        return w * self.ITEMS_PER_WH + i
+
+    def key_cust(self, w, c):
+        return self.W * self.ITEMS_PER_WH + w * self.CUST_PER_WH + c
+
+    @property
+    def n_rows(self):
+        return self.W * (self.ITEMS_PER_WH + self.CUST_PER_WH)
+
+    def new_order(self, rng):
+        e = self.e
+        w = int(rng.integers(0, self.W))
+        e.tl.run_until(e.tl.now + 2 * C_TX_S)     # heavier logic than YCSB
+        c = int(rng.integers(0, self.CUST_PER_WH))
+        v = yield from e.tree.lookup(self.key_cust(w, c))
+        n_items = int(rng.integers(5, 16))
+        val = bytes(e.cfg.value_size)
+        for _ in range(n_items):
+            i = int(rng.integers(0, self.ITEMS_PER_WH))
+            yield from e.tree.update(self.key_stock(w, i), val)
+        self.order_seq += 1
+        yield from e.tree.insert(self.order_seq, val)
+
+    def payment(self, rng):
+        e = self.e
+        w = int(rng.integers(0, self.W))
+        e.tl.run_until(e.tl.now + C_TX_S)
+        c = int(rng.integers(0, self.CUST_PER_WH))
+        val = bytes(e.cfg.value_size)
+        yield from e.tree.update(self.key_cust(w, c), val)
+        yield from e.tree.update(self.key_stock(w, 0), val)
+
+    def order_status(self, rng):
+        e = self.e
+        w = int(rng.integers(0, self.W))
+        e.tl.run_until(e.tl.now + C_TX_S)
+        c = int(rng.integers(0, self.CUST_PER_WH))
+        yield from e.tree.lookup(self.key_cust(w, c))
+        # last order of this customer (best-effort point lookup)
+        if self.order_seq > e.n_tuples + 1_000_000:
+            yield from e.tree.lookup(self.order_seq)
+
+    def delivery(self, rng):
+        e = self.e
+        e.tl.run_until(e.tl.now + 2 * C_TX_S)
+        val = bytes(e.cfg.value_size)
+        base = e.n_tuples + 1_000_000
+        # mark up to 10 oldest undelivered orders
+        for oid in range(max(base + 1, self.order_seq - 10),
+                         self.order_seq + 1):
+            yield from e.tree.update(oid, val)
+
+    def stock_level(self, rng):
+        e = self.e
+        w = int(rng.integers(0, self.W))
+        e.tl.run_until(e.tl.now + C_TX_S)
+        i0 = int(rng.integers(0, self.ITEMS_PER_WH - 20))
+        for i in range(i0, i0 + 20):       # scan 20 recent items' stock
+            yield from e.tree.lookup(self.key_stock(w, i))
+
+    def txn(self, rng):
+        # TPC-C standard mix: NO 45%, P 43%, OS 4%, D 4%, SL 4%
+        r = rng.random()
+        if r < 0.45:
+            yield from self.new_order(rng)
+        elif r < 0.88:
+            yield from self.payment(rng)
+        elif r < 0.92:
+            yield from self.order_status(rng)
+        elif r < 0.96:
+            yield from self.delivery(rng)
+        else:
+            yield from self.stock_level(rng)

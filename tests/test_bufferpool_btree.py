@@ -1,0 +1,160 @@
+"""Buffer pool + B-tree: invariants, eviction race regression, and a
+hypothesis model-based test against a dict oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptiveBatcher, FiberScheduler, IoUring,
+                        SetupFlags, Timeline)
+from repro.core.backends import SimDisk
+from repro.bufferpool import BufferPool, PoolConfig
+from repro.storage.btree import BTree, bulk_load
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn, ycsb_read_txn
+
+
+def make_engine(name="+BatchSubmit", n_tuples=50_000, frames=512):
+    cfg = EngineConfig(name, pool_frames=frames)
+    return StorageEngine(cfg, n_tuples=n_tuples)
+
+
+def test_bulk_load_and_lookup():
+    eng = make_engine()
+    found = {}
+
+    def probe():
+        for key in (0, 1, 17, 49_999, 25_000):
+            v = yield from eng.tree.lookup(key)
+            found[key] = v
+        missing = yield from eng.tree.lookup(123_456_789)
+        found["missing"] = missing
+
+    eng.sched.spawn(probe())
+    eng.sched.run()
+    for key in (0, 1, 17, 49_999, 25_000):
+        assert found[key] is not None
+    assert found["missing"] is None
+
+
+def test_update_roundtrip():
+    eng = make_engine()
+    out = {}
+
+    def txn():
+        ok = yield from eng.tree.update(42, b"\xAB" * 120)
+        assert ok
+        v = yield from eng.tree.lookup(42)
+        out["v"] = v
+
+    eng.sched.spawn(txn())
+    eng.sched.run()
+    assert out["v"][:120] == b"\xAB" * 120
+
+
+def test_insert_with_splits():
+    eng = make_engine(n_tuples=1_000, frames=512)
+    n0 = eng.tree.next_pid
+
+    def txn():
+        for k in range(2_000_000, 2_000_400):
+            yield from eng.tree.insert(k, bytes(120))
+        for k in (2_000_000, 2_000_399):
+            v = yield from eng.tree.lookup(k)
+            assert v is not None
+
+    eng.sched.spawn(txn())
+    eng.sched.run()
+    assert eng.tree.next_pid > n0      # splits allocated pages
+
+
+def test_pool_pin_invariants_after_run():
+    eng = make_engine()
+    eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 500)
+    for i, m in enumerate(eng.pool.meta):
+        assert m.pins == 0, f"frame {i} leaked a pin"
+        if m.pid >= 0:
+            assert eng.pool.table.get(m.pid) == i
+    for pid, idx in eng.pool.table.items():
+        assert eng.pool.meta[idx].pid == pid
+
+
+def test_concurrent_same_page_fix_no_double_load():
+    """Regression: two fibers fixing the same cold page must not allocate
+    two frames (the loading-wait path)."""
+    eng = make_engine(frames=64)
+    results = []
+
+    def f():
+        v = yield from eng.tree.lookup(7)
+        results.append(v)
+
+    for _ in range(8):
+        eng.sched.spawn(f())
+    eng.sched.run()
+    assert len(results) == 8
+    assert all(r is not None for r in results)
+    pids = [m.pid for m in eng.pool.meta if m.pid >= 0]
+    assert len(pids) == len(set(pids)), "duplicate page in pool"
+
+
+def test_dirty_eviction_durability():
+    """Update -> force eviction by reading far pages -> read back."""
+    eng = make_engine(frames=128)
+    out = {}
+
+    def txn():
+        ok = yield from eng.tree.update(3, b"\xCD" * 120)
+        assert ok
+        for k in range(10_000, 45_000, 7):           # flood the pool
+            yield from eng.tree.lookup(k)
+        v = yield from eng.tree.lookup(3)
+        out["v"] = v
+
+    eng.sched.spawn(txn())
+    eng.sched.run()
+    assert out["v"][:120] == b"\xCD" * 120
+    assert eng.pool.writebacks > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4_999),
+                          st.sampled_from(["read", "update"])),
+                min_size=1, max_size=60))
+def test_btree_matches_dict_model(ops):
+    eng = make_engine(n_tuples=5_000, frames=64)
+    model = {}
+    results = []
+
+    def run_ops():
+        for key, op in ops:
+            if op == "read":
+                v = yield from eng.tree.lookup(key)
+                expect = model.get(key)
+                if expect is None:
+                    results.append(v is not None)   # initial value present
+                else:
+                    results.append(v[:120] == expect)
+            else:
+                val = bytes([key % 256]) * 120
+                model[key] = val
+                ok = yield from eng.tree.update(key, val)
+                results.append(ok)
+
+    eng.sched.spawn(run_ops())
+    eng.sched.run()
+    assert all(results)
+
+
+def test_ladder_monotone():
+    """The paper's Fig. 5 shape: each design rung >= the previous
+    (small tolerance for simulator noise)."""
+    tps = []
+    for cfg in EngineConfig.ladder():
+        cfg.pool_frames = 512
+        eng = StorageEngine(cfg, n_tuples=50_000)
+        res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 800)
+        tps.append((cfg.name, res["tps"]))
+    for (n0, t0), (n1, t1) in zip(tps, tps[1:]):
+        assert t1 >= 0.93 * t0, f"{n1} ({t1:.0f}) slower than {n0} ({t0:.0f})"
+    assert tps[-1][1] > 5 * tps[0][1]   # async >> sync overall

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import AdaptiveBatcher
+from repro.models.attention import flash_attention, reference_attention
+from repro.models.mamba import ssd_chunked
+from repro.roofline.analysis import collective_bytes_moved
+from repro.shuffle import ShuffleConfig, ShuffleSim
+
+MiB = 1 << 20
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([32, 64, 128]),
+       st.sampled_from([1, 2, 4]), st.sampled_from([16, 32]),
+       st.booleans())
+def test_flash_equals_reference(b, s, kh, hd, causal):
+    h = kh * 2
+    ks = jax.random.split(jax.random.PRNGKey(s + b), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, q_chunk=16)
+    ref = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([16, 32, 64, 128]))
+def test_ssd_chunk_size_invariance(chunk):
+    """SSD output must not depend on the chunk length."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, S, nh, hp, ns = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, hp)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A_log = jax.random.normal(ks[2], (nh,)) * 0.3
+    B_ = jax.random.normal(ks[3], (B, S, ns)) * 0.5
+    C_ = jax.random.normal(ks[4], (B, S, ns)) * 0.5
+    D_ = jnp.ones((nh,))
+    y = ssd_chunked(x, dt, A_log, B_, C_, D_, chunk)
+    y_ref = ssd_chunked(x, dt, A_log, B_, C_, D_, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 200), st.integers(0, 200), st.integers(0, 200))
+def test_adaptive_batcher_bounds(queued, inflight, ready):
+    """The policy must always flush when the ready queue is empty and
+    never demand a batch beyond max_batch."""
+    p = AdaptiveBatcher(min_batch=4, max_batch=64)
+    if ready == 0 and queued > 0:
+        assert p.should_flush(queued=queued, inflight=inflight, ready=0)
+    if queued >= p.max_batch:
+        assert p.should_flush(queued=queued, inflight=inflight,
+                              ready=ready)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([64, 512, 4096]), st.sampled_from([4, 16]),
+       st.booleans(), st.booleans())
+def test_shuffle_conservation_and_bounds(ts, nw, zs, zr):
+    cfg = ShuffleConfig(tuple_size=ts, n_workers=nw, n_nodes=3,
+                        total_bytes_per_node=16 * MiB,
+                        zc_send=zs, zc_recv=zr)
+    sim = ShuffleSim(cfg)
+    r = sim.run()
+    # conservation: every remote byte sent is received
+    assert sum(sim.sent) == sum(sim.received)
+    # physics: egress can never exceed the link rate
+    assert r["egress_gbit_per_node"] <= 400.0 * 1.01
+    # zero-copy can only reduce memory traffic per network byte
+    base = ShuffleSim(ShuffleConfig(tuple_size=ts, n_workers=nw, n_nodes=3,
+                                    total_bytes_per_node=16 * MiB)).run()
+    if zs and zr:
+        assert r["mem_per_net_byte"] < base["mem_per_net_byte"] + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["all-gather", "reduce-scatter", "all-reduce",
+                        "all-to-all", "collective-permute"]),
+       st.integers(2, 64), st.integers(1, 1 << 20))
+def test_collective_ring_formulas(kind, group, nbytes):
+    moved, by_kind = collective_bytes_moved(
+        [{"kind": kind, "bytes": nbytes, "group": group}])
+    assert moved >= 0
+    # bounded by (group-1) x payload for every ring algorithm
+    assert moved <= nbytes * (group - 1) + 1e-9
+    if kind == "collective-permute":
+        assert moved == nbytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 1000), st.integers(2, 100))
+def test_clock_model_consistency(n_txns, faults_pct):
+    """Cycle model monotonicity: more page faults -> fewer tx/s."""
+    from repro.core.perfmodel import CycleModel
+    r1 = CycleModel(c_tx=8264, c_io=11100,
+                    page_fault_rate=faults_pct / 100).tx_per_s()
+    r2 = CycleModel(c_tx=8264, c_io=11100,
+                    page_fault_rate=min(1.0, faults_pct / 100 + 0.1)
+                    ).tx_per_s()
+    assert r2 <= r1

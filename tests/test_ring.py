@@ -1,0 +1,145 @@
+"""Ring semantics: batching, execution paths, flags, linking."""
+
+import pytest
+
+from repro.core import (IoUring, SetupFlags, SimNVMe, Timeline, CqeFlags,
+                        NVMeSpec, SqeFlags)
+from repro.core import ring as R
+
+
+def make_ring(setup=SetupFlags.DEFER_TASKRUN | SetupFlags.SINGLE_ISSUER,
+              spec=None):
+    tl = Timeline()
+    ring = IoUring(tl, setup=setup)
+    dev = SimNVMe(tl, spec or NVMeSpec())
+    ring.register_device(3, dev)
+    return tl, ring, dev
+
+
+def test_single_read_latency():
+    tl, ring, dev = make_ring()
+    sqe = ring.get_sqe()
+    R.prep_read(sqe, 3, bytearray(4096), 0, 4096, user_data=7)
+    ring.submit()
+    cqe = ring.wait_cqe()
+    assert cqe.user_data == 7
+    assert cqe.res == 4096
+    # ~70 us read latency + CPU costs
+    assert 70e-6 <= tl.now <= 90e-6
+
+
+def test_batched_submission_amortizes_syscalls():
+    tl, ring, _ = make_ring()
+    for i in range(32):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(32)
+    assert ring.stats.enters == 1
+    assert ring.stats.sqes_submitted == 32
+    assert ring.stats.batch_efficiency() == 32
+
+
+def test_batching_reduces_cpu_per_op():
+    """Paper §2.1: cycles/op drops ~5–6x at batch 16."""
+    def cpu_per_op(batch):
+        tl, ring, _ = make_ring()
+        n = 64
+        for s in range(0, n, batch):
+            for i in range(batch):
+                sqe = ring.get_sqe()
+                R.prep_read(sqe, 3, bytearray(4096), (s + i) * 4096, 4096)
+            ring.submit()
+            ring.wait_cqes(batch)
+        return ring.stats.cpu_seconds_app / n
+
+    r1, r16 = cpu_per_op(1), cpu_per_op(16)
+    assert r1 / r16 > 1.3           # amortization visible
+    assert r1 > r16
+
+
+def test_fsync_goes_to_worker_path():
+    tl, ring, _ = make_ring()
+    sqe = ring.get_sqe()
+    R.prep_fsync(sqe, 3, user_data=1)
+    ring.submit()
+    cqe = ring.wait_cqe()
+    assert cqe.flags & CqeFlags.WORKER
+    assert ring.stats.worker_fallbacks == 1
+    assert tl.now >= 1e-3           # consumer fsync is ~ms
+
+
+def test_nvme_flush_is_async():
+    tl, ring, _ = make_ring()
+    sqe = ring.get_sqe()
+    R.prep_fsync(sqe, 3, user_data=1, nvme_flush=True)
+    ring.submit()
+    cqe = ring.wait_cqe()
+    assert not (cqe.flags & CqeFlags.WORKER)
+    assert tl.now < 1e-4            # PLP flush ~5 us
+
+
+def test_large_block_worker_fallback():
+    """Paper Fig. 8: blocks above max segments spawn io_workers."""
+    tl, ring, _ = make_ring()
+    sqe = ring.get_sqe()
+    R.prep_read(sqe, 3, bytearray(1 << 20), 0, 1 << 20, user_data=1)
+    ring.submit()
+    cqe = ring.wait_cqe()
+    assert cqe.flags & CqeFlags.WORKER
+
+
+def test_forced_async_flag():
+    tl, ring, _ = make_ring()
+    sqe = ring.get_sqe()
+    R.prep_nop(sqe, user_data=3, flags=SqeFlags.ASYNC)
+    ring.submit()
+    cqe = ring.wait_cqe()
+    assert cqe.flags & CqeFlags.WORKER
+    assert tl.now >= 7e-6           # +7.3 us worker overhead
+
+
+def test_sqpoll_no_app_syscall():
+    tl, ring, _ = make_ring(setup=SetupFlags.SQPOLL)
+    for i in range(8):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(8)
+    assert ring.stats.enters == 0               # no enter syscall
+    assert ring.stats.sqpoll_wakeups == 1       # 30us wake happened once
+    assert ring.stats.cpu_seconds_sqpoll > 0
+
+
+def test_link_timeout_cancels_slow_op():
+    slow = NVMeSpec(read_lat=5e-3)
+    tl, ring, _ = make_ring(spec=slow)
+    sqe = ring.get_sqe()
+    R.prep_read(sqe, 3, bytearray(4096), 0, 4096, user_data=1,
+                flags=SqeFlags.IO_LINK)
+    t = ring.get_sqe()
+    R.prep_link_timeout(t, 1e-3, user_data=2)
+    ring.submit()
+    cqes = ring.wait_cqes(2)
+    results = {c.user_data: c.res for c in cqes}
+    assert results[1] < 0          # canceled
+    assert tl.now < 2e-3           # did not wait the full 5 ms
+
+
+def test_registered_buffers_skip_bounce_copies():
+    tl, ring, _ = make_ring()
+    bufs = [bytearray(4096) for _ in range(4)]
+    ring.register_buffers(bufs)
+    for i in range(4):
+        sqe = ring.get_sqe()
+        R.prep_read_fixed(sqe, 3, i, i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(4)
+    assert ring.stats.bounce_bytes_copied == 0
+
+    for i in range(4):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096)
+    ring.submit()
+    ring.wait_cqes(4)
+    assert ring.stats.bounce_bytes_copied == 4 * 4096

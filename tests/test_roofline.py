@@ -1,0 +1,134 @@
+"""Roofline machinery: structural HLO parser exactness, per-device
+cost_analysis semantics, partitioning rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import collective_bytes_moved, roofline_terms
+
+
+def test_scan_trip_count_multiplication():
+    """XLA counts while bodies once; the structural parser must multiply
+    by known_trip_count (the whole point of hlo_cost)."""
+    def f(x, w):
+        def body(c, wl):
+            return c @ wl, ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((12, 16, 16), jnp.float32)).compile()
+    rep = hlo_cost.analyze(comp.as_text())
+    expect = 12 * 2 * 8 * 16 * 16
+    assert rep.dot_flops == expect
+    xla = comp.cost_analysis().get("flops", 0.0)
+    assert xla < expect              # the very bug we work around
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, wl):
+            def inner(c2, _):
+                return c2 @ wl, ()
+            c2, _ = jax.lax.scan(inner, c, jnp.arange(5))
+            return c2, ()
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4, 8), jnp.float32),
+        jax.ShapeDtypeStruct((3, 8, 8), jnp.float32)).compile()
+    rep = hlo_cost.analyze(comp.as_text())
+    assert rep.dot_flops == 3 * 5 * 2 * 4 * 8 * 8
+
+
+def test_plain_matmul_flops_exact():
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
+    rep = hlo_cost.analyze(comp.as_text())
+    assert rep.dot_flops == 2 * 32 * 64 * 128
+
+
+def test_roofline_terms_bottleneck_selection():
+    t = roofline_terms(hlo_flops=197e12, hlo_bytes=0, coll_moved=0,
+                       n_chips=1)
+    assert t["bottleneck"] == "compute" and abs(t["t_compute_s"] - 1) < 1e-9
+    t = roofline_terms(hlo_flops=0, hlo_bytes=819e9, coll_moved=0,
+                       n_chips=1)
+    assert t["bottleneck"] == "memory"
+    t = roofline_terms(hlo_flops=0, hlo_bytes=0, coll_moved=50e9, n_chips=1)
+    assert t["bottleneck"] == "collective"
+
+
+def test_collective_formulas():
+    recs = [{"kind": "all-reduce", "bytes": 100, "group": 4}]
+    moved, by = collective_bytes_moved(recs)
+    assert abs(moved - 2 * 100 * 3 / 4) < 1e-9
+    recs = [{"kind": "all-gather", "bytes": 100, "group": 4}]
+    moved, _ = collective_bytes_moved(recs)
+    assert abs(moved - 100 * 3 / 4) < 1e-9
+    recs = [{"kind": "reduce-scatter", "bytes": 25, "group": 4}]
+    moved, _ = collective_bytes_moved(recs)
+    assert abs(moved - 25 * 3) < 1e-9
+
+
+def test_partitioning_rules():
+    from repro.models.partitioning import (batch_axes_for, rules_for,
+                                           spec_for)
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert spec_for(("embed", "mlp"), mesh) == P("data", "model")
+    assert spec_for(("kv_heads",), mesh) == P(None)
+
+    # production-width semantics via a light mesh stand-in
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    fake = FakeMesh()
+    assert batch_axes_for(1, fake) == ()       # batch=1 can't shard
+    assert batch_axes_for(256, fake) == ("data",)
+    assert batch_axes_for(8, fake) == ()       # 8 % 16 != 0
+    r = rules_for(fake, 1, wide_kv=True)
+    assert r["batch"] == ()
+    assert "model" in r["kv_seq"]
+
+
+def test_dryrun_artifacts_exist_and_fit():
+    """The sweep must have produced every (arch x shape x mesh) cell, and
+    every single-pod cell must fit in 16 GB/chip HBM."""
+    import glob
+    import json
+    import os
+    files = glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "dryrun", "*.json"))
+    if len(files) < 80:
+        pytest.skip("dry-run sweep artifacts not present")
+    # XLA:CPU hoists a bf16->f32 convert of the whole stacked KV cache
+    # out of the decode layer loop (phantom f32 cache copies that do not
+    # exist on TPU's native-bf16 MXU) — see EXPERIMENTS.md §Dry-run note 3.
+    CPU_PHANTOM_F32_CACHE = {
+        ("musicgen-large", "decode_32k"),
+        ("deepseek-67b", "decode_32k"),
+    }
+    ok = skipped = 0
+    over = []
+    for fn in files:
+        with open(fn) as f:
+            r = json.load(f)
+        if "skipped" in r.get("status", ""):
+            skipped += 1
+            continue
+        assert r["status"] == "ok", fn
+        ok += 1
+        peak = r["memory"]["peak_est_bytes"]
+        if peak > 16 * 2**30 and \
+                (r["arch"], r["shape"]) not in CPU_PHANTOM_F32_CACHE:
+            over.append((os.path.basename(fn), peak / 2**30))
+    assert ok + skipped == len(files)
+    assert not over, f"cells over 16 GiB/chip: {over}"

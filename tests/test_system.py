@@ -1,0 +1,51 @@
+"""End-to-end lifecycle: pipeline -> train -> injected failure -> restore
+-> finish -> serve. The whole framework in one test."""
+
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import RingLoader, TokenStore, make_synthetic_corpus
+from repro.serve import ServeLoop
+from repro.train import TrainLoop, TrainLoopConfig
+from repro.train.loop import InjectedFailure
+
+
+def test_full_lifecycle():
+    tmp = tempfile.mkdtemp()
+    try:
+        cfg = get_smoke_config("stablelm-1.6b")
+        corpus = make_synthetic_corpus(os.path.join(tmp, "tok.bin"),
+                                       100_000, cfg.vocab_size)
+        loader = RingLoader(TokenStore(corpus), batch=2, seq=32, prefetch=2)
+        lc = TrainLoopConfig(total_steps=8, ckpt_every=3,
+                             ckpt_dir=os.path.join(tmp, "ck"),
+                             log_every=2, fail_at_step=5)
+        loop = TrainLoop(cfg, lc, loader)
+        with pytest.raises(InjectedFailure):
+            loop.run()
+
+        loader2 = RingLoader(TokenStore(corpus), batch=2, seq=32,
+                             prefetch=2)
+        lc2 = TrainLoopConfig(total_steps=8, ckpt_every=3,
+                              ckpt_dir=lc.ckpt_dir, log_every=2)
+        loop2 = TrainLoop(cfg, lc2, loader2)
+        assert loop2.restore() == 3
+        final = loop2.run()
+        assert np.isfinite(final["loss"])
+
+        sv = ServeLoop(cfg, loop2.params, max_len=64)
+        prompt = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+            jnp.int32)
+        out = sv.generate(prompt, 4)
+        assert out.shape == (2, 4)
+        assert bool((out >= 0).all())
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -17,6 +17,8 @@ def run(n_txns: int = 2500):
     section("buffer manager YCSB ladder (paper Fig. 5)")
     fault = None
     for cfg in EngineConfig.ladder():
+        if cfg.name not in PAPER_TPS:
+            continue          # durability rungs: see bench_wal (Fig. 9)
         cfg.pool_frames = 2048
         eng = StorageEngine(cfg, n_tuples=200_000)
         res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),

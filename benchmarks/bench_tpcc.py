@@ -9,8 +9,10 @@ from repro.storage.workloads import TPCCLite
 def run(n_txns: int = 1200):
     section("TPC-C (paper Fig. 6)")
     ladder = {c.name: c for c in EngineConfig.ladder()}
+    # +GroupCommit: the durable variant — same engine but every write
+    # txn commits through the WAL (one linked write->fsync per batch)
     for W in (1, 20):
-        for name in ("posix", "+BatchSubmit", "+IOPoll"):
+        for name in ("posix", "+BatchSubmit", "+IOPoll", "+GroupCommit"):
             cfg = ladder[name]
             cfg.pool_frames = 4096
             n_rows = W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
@@ -18,5 +20,8 @@ def run(n_txns: int = 1200):
             tp = TPCCLite(eng, W)
             res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
             fault = res["faults"] / max(1, res["faults"] + res["hits"])
-            emit(f"fig6/W={W}/{name}/tps", round(res["tps"]),
-                 f"fault={fault:.3f} restarts={eng.tree.restarts}")
+            extra = f"fault={fault:.3f} restarts={eng.tree.restarts}"
+            if "fsyncs" in res:
+                extra += (f" fsyncs={res['fsyncs']}"
+                          f" group={res['group_size']:.1f}")
+            emit(f"fig6/W={W}/{name}/tps", round(res["tps"]), extra)

@@ -1,0 +1,85 @@
+"""Paper Fig. 9, end-to-end: durable transactions through the WAL
+subsystem (repro.wal) instead of the isolated micro-benchmark in
+bench_durable.py.
+
+Three sweeps:
+
+  fig9wal/paths   per-commit latency of the three durable-write paths
+                  on the same workload — write+fsync (+WAL, io_worker
+                  fallback), linked write→fsync (+GroupCommit), and
+                  passthrough write + NVMe flush (+PassthruFlush) — on
+                  consumer vs enterprise (PLP) SSDs.  Expected ordering
+                  on PLP hardware: passthru < linked < write+fsync.
+
+  fig9wal/group   fsync amortization vs fiber count: group commit's
+                  achieved group size and fsyncs/txn as concurrency
+                  grows (1 → 128 fibers).
+
+  fig9wal/tpcc    durable TPC-C: throughput of the non-durable engine
+                  vs the three durability rungs, plus WAL volume and
+                  the WAL-induced eviction waits.
+"""
+
+from benchmarks.common import emit, section
+from repro.core import NVMeSpec
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import TPCCLite, ycsb_update_txn
+
+SSDS = {
+    "consumer": dict(plp=False, fsync_lat=1.2e-3),
+    "enterprise": dict(plp=True, fsync_lat=30e-6),
+}
+
+RUNGS = [("+WAL", "wal"), ("+GroupCommit", "group"),
+         ("+PassthruFlush", "passthru-flush")]
+
+
+def _engine(name, durability, *, n_fibers=128, n_tuples=50_000,
+            frames=2048, spec=None):
+    cfg = EngineConfig(
+        name, n_fibers=n_fibers, pool_frames=frames,
+        durability=durability,
+        fixed_bufs=durability in ("group", "passthru-flush"),
+        passthrough=durability == "passthru-flush")
+    return StorageEngine(cfg, n_tuples=n_tuples, spec=spec)
+
+
+def run(n_txns: int = 768):
+    section("WAL durable writes, end-to-end (paper Fig. 9)")
+    # -- per-commit latency of the three paths, per SSD class
+    for ssd, kw in SSDS.items():
+        for name, dur in RUNGS:
+            eng = _engine(name, dur, spec=NVMeSpec(**kw))
+            res = eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng),
+                                 n_txns)
+            emit(f"fig9wal/paths/{ssd}/{name}/commit_us",
+                 round(res["commit_wait_us"], 1),
+                 f"fsyncs={res['fsyncs']} group={res['group_size']:.1f} "
+                 f"workers={res['worker_fallbacks']}")
+
+    # -- group-size scaling: fsync amortization vs concurrency
+    for n_fibers in (1, 8, 32, 128):
+        eng = _engine("+GroupCommit", "group", n_fibers=n_fibers,
+                      spec=NVMeSpec(**SSDS["enterprise"]))
+        res = eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng),
+                             n_txns)
+        emit(f"fig9wal/group/fibers={n_fibers}/fsyncs_per_txn",
+             round(res["fsyncs_per_txn"], 3),
+             f"group={res['group_size']:.1f} tps={res['tps']:.0f} "
+             f"commit_us={res['commit_wait_us']:.0f}")
+
+    # -- durable TPC-C (the PostgreSQL-case-study shape: WAL dominates)
+    W = 4
+    n_rows = W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
+    for name, dur in [("+BatchSubmit", "none")] + RUNGS:
+        eng = _engine(name, dur, n_tuples=n_rows + 100, frames=4096,
+                      spec=NVMeSpec(**SSDS["enterprise"]))
+        tp = TPCCLite(eng, W)
+        res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
+        extra = ""
+        if dur != "none":
+            extra = (f"fsyncs={res['fsyncs']} "
+                     f"group={res['group_size']:.1f} "
+                     f"log_mb={res['log_mb']:.2f} "
+                     f"evict_waits={res['wal_evict_waits']}")
+        emit(f"fig9wal/tpcc/W={W}/{name}/tps", round(res["tps"]), extra)

@@ -16,6 +16,7 @@ MODULES = [
     ("fig7", "benchmarks.bench_scaleout"),
     ("fig8", "benchmarks.bench_blocksize"),
     ("fig9", "benchmarks.bench_durable"),
+    ("fig9wal", "benchmarks.bench_wal"),
     ("fig11-14", "benchmarks.bench_shuffle"),
     ("fig15-16", "benchmarks.bench_sendrecv"),
     ("fig17", "benchmarks.bench_guidelines"),

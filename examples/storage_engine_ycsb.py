@@ -20,6 +20,10 @@ def main():
     print(f"{'config':14s} {'tx/s':>10s} {'fault':>6s} {'enters':>7s} "
           f"{'batch':>6s} {'workers':>8s}")
     for cfg in EngineConfig.ladder():
+        # Fig. 5 is the non-durable ladder; durability rungs are
+        # covered by benchmarks/bench_wal.py (Fig. 9)
+        if cfg.durability != "none":
+            continue
         cfg.pool_frames = 2048
         eng = StorageEngine(cfg, n_tuples=200_000)
         res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# One-step verify entrypoint: runs the tier-1 test suite exactly as the
+# ROADMAP specifies.  Usage: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

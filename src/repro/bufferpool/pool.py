@@ -17,6 +17,7 @@ to the synchronous baseline exactly as in the paper.
 
 from __future__ import annotations
 
+import struct
 from dataclasses import dataclass, field
 from typing import Dict, Generator, List, Optional
 
@@ -25,6 +26,11 @@ from repro.core.ring import (prep_read, prep_read_fixed, prep_write,
                              prep_write_fixed)
 
 PAGE = 4096
+
+#: byte offset of the u64 page LSN inside every page's header — shared
+#: with the B-tree node layout (repro.storage.btree imports this) and
+#: the WAL's redo pass.
+PAGE_LSN_OFF = 4
 
 
 @dataclass
@@ -45,6 +51,8 @@ class Frame:
     ref: bool = False
     pins: int = 0
     loading: bool = False
+    rec_lsn: int = 0      # WAL LSN that first dirtied this frame since
+                          # it was last clean (ARIES dirty-page table)
 
 
 class BufferPool:
@@ -59,13 +67,21 @@ class BufferPool:
         self.meta = [Frame() for _ in range(cfg.n_frames)]
         self.table: Dict[int, int] = {}
         self.loading_pids: set = set()   # fault in progress (no frame yet)
+        self.evicting_pids: set = set()  # dirty writeback in flight: a
+                                         # re-fault would read STALE disk
         self.hand = 0
+        self._clean_hand = 0       # clean_some's rotating scan cursor
         self.free: List[int] = list(range(cfg.n_frames))
+        # WAL-before-data hook: when the engine attaches a WAL, dirty
+        # pages cannot be written back until the log is durable up to
+        # their page LSN (set by stamp_lsn).
+        self.wal = None
         # stats
         self.hits = 0
         self.faults = 0
         self.evictions = 0
         self.writebacks = 0
+        self.wal_waits = 0               # evictions that had to flush WAL
 
     # ------------------------------------------------------------------
 
@@ -93,6 +109,9 @@ class BufferPool:
             if pid in self.loading_pids:
                 yield None               # another fiber owns this fault
                 continue
+            if pid in self.evicting_pids:
+                yield None               # writeback in flight: reading
+                continue                 # disk now would lose the update
             break
         self.faults += 1
         self.loading_pids.add(pid)
@@ -135,6 +154,26 @@ class BufferPool:
     def page(self, idx: int) -> bytearray:
         return self.frames[idx]
 
+    # ------------------------------------------------- WAL integration
+
+    def stamp_lsn(self, idx: int, lsn: int) -> None:
+        """Record that APPLY record ``lsn`` modified this frame: write
+        the page LSN into the page header and track the frame's recLSN
+        for the dirty-page table."""
+        struct.pack_into("<Q", self.frames[idx], PAGE_LSN_OFF, lsn)
+        m = self.meta[idx]
+        if m.rec_lsn == 0:
+            m.rec_lsn = lsn
+
+    def page_lsn(self, idx: int) -> int:
+        return struct.unpack_from("<Q", self.frames[idx], PAGE_LSN_OFF)[0]
+
+    def dirty_page_table(self) -> Dict[int, int]:
+        """{pid: recLSN} of every dirty resident page (fuzzy-checkpoint
+        payload)."""
+        return {m.pid: m.rec_lsn for m in self.meta
+                if m.pid >= 0 and m.dirty and m.rec_lsn > 0}
+
     def adopt_new_page(self, pid: int) -> int:
         """Allocate a frame for a brand-new page (B-tree split) WITHOUT
         yielding: uses a free frame or steals a clean unpinned victim.
@@ -170,12 +209,61 @@ class BufferPool:
     def _allocate(self) -> Generator:
         if self.free:
             return self.free.pop()
-        victims = self._clock_sweep()
-        while not victims:          # everything pinned/loading: wait
-            yield None
+        while True:
+            n = yield from self.evict_some()
             if self.free:
                 return self.free.pop()
-            victims = self._clock_sweep()
+            if n == 0:              # everything pinned/loading: wait
+                yield None
+
+    def clean_some(self) -> Generator:
+        """Write back one batch of dirty unpinned frames but KEEP them
+        resident (checkpoint flushing).  The frames are marked
+        ``loading`` for the write's flight so no fiber can modify the
+        page between the WAL flush and the data write — the same
+        invariant eviction relies on.  Returns the number cleaned."""
+        n = self.cfg.n_frames
+        victims = []
+        for k in range(n):                    # rotating cursor: a fixed
+            i = (self._clean_hand + k) % n    # start index would starve
+            m = self.meta[i]                  # high frames forever
+            if m.dirty and m.pins == 0 and not m.loading:
+                victims.append(i)
+                if len(victims) >= self.cfg.evict_batch:
+                    break
+        self._clean_hand = (victims[-1] + 1) % n if victims else 0
+        if not victims:
+            return 0
+        for i in victims:
+            self.meta[i].loading = True
+        if self.wal is not None:
+            need = max(self.page_lsn(i) for i in victims)
+            if need > self.wal.durable_lsn:
+                self.wal_waits += 1
+                yield from self.wal.flush_to(need)
+        self.writebacks += len(victims)
+        reqs = [self._write_req(i) for i in victims]
+        if self.cfg.batch_evict:
+            yield reqs
+        else:
+            for r in reqs:
+                yield r
+        for i in victims:
+            self.meta[i].dirty = False
+            self.meta[i].rec_lsn = 0
+            self.meta[i].loading = False
+        return len(victims)
+
+    def evict_some(self) -> Generator:
+        """Evict up to one clock-sweep batch of victims (writing dirty
+        ones back under the WAL-before-data rule) and put the frames on
+        the free list.  Returns the number of frames freed.  Also used
+        by the engine's background page cleaner so that write-heavy
+        in-memory workloads keep clean frames available for B-tree
+        splits (``adopt_new_page`` cannot suspend)."""
+        victims = self._clock_sweep()
+        if not victims:
+            return 0
         # reserve immediately: drop from the table and mark loading so no
         # concurrent fiber can pin (or steal) a frame whose writeback is
         # still in flight
@@ -184,6 +272,16 @@ class BufferPool:
             self.meta[i].loading = True
         dirty = [i for i in victims if self.meta[i].dirty]
         if dirty:
+            for i in dirty:          # block re-faults until disk is current
+                self.evicting_pids.add(self.meta[i].pid)
+            # WAL-before-data: the log must be durable up to the newest
+            # APPLY LSN of any victim before its bytes may hit the data
+            # disk (otherwise a crash could expose unlogged changes)
+            if self.wal is not None:
+                need = max(self.page_lsn(i) for i in dirty)
+                if need > self.wal.durable_lsn:
+                    self.wal_waits += 1
+                    yield from self.wal.flush_to(need)
             self.writebacks += len(dirty)
             reqs = [self._write_req(i) for i in dirty]
             if self.cfg.batch_evict:
@@ -193,12 +291,14 @@ class BufferPool:
                     yield r
             for i in dirty:
                 self.meta[i].dirty = False
+                self.meta[i].rec_lsn = 0
+                self.evicting_pids.discard(self.meta[i].pid)
         for i in victims:
             self.evictions += 1
             self.meta[i].pid = -1
             self.meta[i].loading = False
             self.free.append(i)
-        return self.free.pop()
+        return len(victims)
 
     def _clock_sweep(self) -> List[int]:
         """Second-chance sweep collecting up to evict_batch victims (one

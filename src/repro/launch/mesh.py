@@ -9,19 +9,26 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """Version-compat shim: ``jax.sharding.AxisType`` and the
+    ``axis_types=`` kwarg of ``jax.make_mesh`` only exist on newer jax;
+    older installs get the same (Auto-typed) mesh without the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names (smoke / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

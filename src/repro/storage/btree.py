@@ -9,8 +9,12 @@ latches; a traversal records the tree version at entry and RESTARTS if a
 structural change (split) happened across any suspension point.
 
 Page layout (little-endian):
-    [0]   u8   node type: 0 = leaf, 1 = internal
-    [1:3] u16  nkeys
+    [0]    u8   node type: 0 = leaf, 1 = internal
+    [1:3]  u16  nkeys
+    [4:12] u64  page LSN — WAL offset of the last APPLY record that
+                modified this page (0 for bulk-loaded pages; see
+                repro.wal).  The buffer pool refuses to write back a
+                dirty page until the log is durable up to this LSN.
     leaf:     keys i64[fanout] | values u8[fanout × value_size]
     internal: keys i64[fanout] | children i32[fanout + 1]
 """
@@ -22,7 +26,18 @@ from typing import Generator, List, Optional, Tuple
 
 import numpy as np
 
-HDR = 4
+from repro.bufferpool.pool import PAGE_LSN_OFF
+
+HDR = 12
+
+
+def page_lsn(buf) -> int:
+    """Read a page's LSN straight from its header bytes."""
+    return struct.unpack_from("<Q", buf, PAGE_LSN_OFF)[0]
+
+
+def set_page_lsn(buf, lsn: int) -> None:
+    struct.pack_into("<Q", buf, PAGE_LSN_OFF, lsn)
 
 
 def leaf_fanout(page_size: int, value_size: int) -> int:
@@ -60,6 +75,15 @@ class _Node:
     def nkeys(self, n: int):
         self.raw[1] = n & 0xFF
         self.raw[2] = (n >> 8) & 0xFF
+
+    @property
+    def lsn(self) -> int:
+        return int(self.raw[PAGE_LSN_OFF:PAGE_LSN_OFF + 8]
+                   .view(np.uint64)[0])
+
+    @lsn.setter
+    def lsn(self, v: int):
+        self.raw[PAGE_LSN_OFF:PAGE_LSN_OFF + 8].view(np.uint64)[0] = v
 
     # views
     def keys(self) -> np.ndarray:
@@ -118,7 +142,14 @@ class BTree:
 
     # ------------------------------------------------------------- update
 
-    def update(self, key: int, value: bytes) -> Generator:
+    def update(self, key: int, value: bytes,
+               oplog: Optional[List] = None) -> Generator:
+        """``oplog`` (WAL hook): a per-call list that collects
+        ("upsert", pid, key, value) for an in-place leaf write or
+        ("img", pid) for each page a split touched, so the engine can
+        frame one APPLY record per tree op (see repro.wal).  Must be
+        per-call — fibers suspend mid-traversal, so shared state would
+        interleave concurrent transactions' entries."""
         while True:
             v0 = self.version
             pid = self.root
@@ -137,6 +168,8 @@ class BTree:
                     if ok:
                         node.values()[j, :len(value)] = np.frombuffer(
                             value, np.uint8)
+                        if oplog is not None:
+                            oplog.append(("upsert", pid, key, value))
                     self.pool.unfix(idx, dirty=ok)
                     return ok
                 j = int(np.searchsorted(node.keys()[:n], key, side="right"))
@@ -145,10 +178,12 @@ class BTree:
 
     # ------------------------------------------------------------- insert
 
-    def insert(self, key: int, value: bytes) -> Generator:
+    def insert(self, key: int, value: bytes,
+               oplog: Optional[List] = None) -> Generator:
         """Insert with root-to-leaf split propagation. The whole path is
         pinned before any modification, so no fiber observes a half-split
         (between yields the world cannot change — cooperative scheduling).
+        ``oplog``: per-call WAL hook, see ``update``.
         """
         while True:
             v0 = self.version
@@ -176,12 +211,13 @@ class BTree:
             if restart:
                 continue
             # leaf insert (no yields from here on)
-            self._insert_pinned(path, key, value)
+            self._insert_pinned(path, key, value, oplog)
             for _, i in reversed(path):
                 self.pool.unfix(i, dirty=True)
             return True
 
-    def _insert_pinned(self, path, key: int, value: bytes) -> None:
+    def _insert_pinned(self, path, key: int, value: bytes,
+                       oplog: Optional[List] = None) -> None:
         pid, idx = path[-1]
         node = self._node(idx)
         n = node.nkeys
@@ -189,6 +225,8 @@ class BTree:
         j = int(np.searchsorted(keys[:n], key))
         if j < n and keys[j] == key:               # upsert
             node.values()[j, :len(value)] = np.frombuffer(value, np.uint8)
+            if oplog is not None:
+                oplog.append(("upsert", pid, key, value))
             return
         if n < node.lf:
             keys[j + 1:n + 1] = keys[j:n].copy()
@@ -197,11 +235,14 @@ class BTree:
             keys[j] = key
             vals[j, :len(value)] = np.frombuffer(value, np.uint8)
             node.nkeys = n + 1
+            if oplog is not None:
+                oplog.append(("upsert", pid, key, value))
             return
         # leaf split
-        self._split_insert(path, key, value)
+        self._split_insert(path, key, value, oplog)
 
-    def _split_insert(self, path, key: int, value: bytes) -> None:
+    def _split_insert(self, path, key: int, value: bytes,
+                      oplog: Optional[List] = None) -> None:
         """Split the full leaf, then propagate (allocating fresh in-pool
         pages; they are written back by normal eviction)."""
         self.version += 1
@@ -232,11 +273,14 @@ class BTree:
         ks[j] = key
         vals[j, :len(value)] = np.frombuffer(value, np.uint8)
         tgt_node.nkeys = m + 1
+        if oplog is not None:
+            oplog.append(("img", pid))
+            oplog.append(("img", new_pid))
         self.pool.unfix_new(nidx)
-        self._insert_sep(path[:-1], sep, new_pid, pid)
+        self._insert_sep(path[:-1], sep, new_pid, pid, oplog)
 
     def _insert_sep(self, path, sep: int, right_pid: int,
-                    left_pid: int) -> None:
+                    left_pid: int, oplog: Optional[List] = None) -> None:
         if not path:
             # new root
             new_root_pid = self.next_pid
@@ -249,6 +293,8 @@ class BTree:
             rnode.children()[0] = left_pid
             rnode.children()[1] = right_pid
             self.root = new_root_pid
+            if oplog is not None:
+                oplog.append(("img", new_root_pid))
             self.pool.unfix_new(ridx)
             return
         pid, idx = path[-1]
@@ -263,6 +309,8 @@ class BTree:
             keys[j] = sep
             ch[j + 1] = right_pid
             node.nkeys = n + 1
+            if oplog is not None:
+                oplog.append(("img", pid))
             return
         # split internal node
         mid = n // 2
@@ -289,8 +337,11 @@ class BTree:
         keys[j] = sep
         ch[j + 1] = right_pid
         tnode.nkeys = m + 1
+        if oplog is not None:
+            oplog.append(("img", pid))
+            oplog.append(("img", new_pid))
         self.pool.unfix_new(nidx)
-        self._insert_sep(path[:-1], up, new_pid, pid)
+        self._insert_sep(path[:-1], up, new_pid, pid, oplog)
 
 
 # ---------------------------------------------------------------------------

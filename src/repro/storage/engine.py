@@ -11,12 +11,32 @@ Each ``EngineConfig`` names one rung:
     +Passthru    NVMe passthrough
     +IOPoll      completion polling
     +SQPoll      submission polling (dedicated core)
+
+and, with the WAL subsystem (paper Fig. 9 / §3.4.2 — see ``repro.wal``),
+the durability rungs:
+
+    +WAL           write-ahead log, per-txn commit (write+fsync; the
+                   fsync rides the io_worker fallback)
+    +GroupCommit   group-commit coordinator, ONE linked write→fsync
+                   chain per batch of committers
+    +PassthruFlush group commit over a passthrough log device with an
+                   NVMe flush command (enterprise/PLP: ~5 µs barrier)
+
+Transactions under a durable rung are redo-only with deferred apply:
+``Txn.update``/``insert`` stream intent records into the log and buffer
+the write-set; ``StorageEngine.commit`` appends COMMIT, suspends the
+fiber until its LSN is durable, then applies the write-set to the
+B-tree, framing one APPLY record per tree op (page deltas/images) so
+crash recovery can redo physiologically.  See ``repro.wal`` for the
+full protocol and ``repro.wal.recovery`` for the other half.
 """
 
 from __future__ import annotations
 
+import itertools
+import struct as _struct
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Generator, List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +45,21 @@ from repro.core import (AdaptiveBatcher, EagerSubmit, FiberScheduler,
                         IoUring, NVMeSpec, SetupFlags, Timeline)
 from repro.core.backends import SimDisk
 from repro.storage.btree import BTree, bulk_load
+from repro.wal.group_commit import GroupCommit
+from repro.wal.log import (APPLY_DELTA, APPLY_IMG, LogHeader, RecordType,
+                           WriteAheadLog, encode_apply, encode_checkpoint,
+                           encode_kv, encode_record)
+
+DATA_FD = 3
+LOG_FD = 4
+
+#: durability config -> WAL flush path (paper Fig. 9)
+_DURABILITY_MODES = {
+    "none": None,
+    "wal": "fsync",               # write, wait, fsync (worker fallback)
+    "group": "linked",            # one linked write->fsync chain
+    "passthru-flush": "passthru",  # passthrough write + NVMe flush (PLP)
+}
 
 
 @dataclass
@@ -41,10 +76,15 @@ class EngineConfig:
     page_size: int = 4096
     value_size: int = 120
     evict_batch: int = 16
+    # durability ladder (repro.wal): none | wal | group | passthru-flush
+    durability: str = "none"
+    log_capacity: int = 64 * 1024 * 1024
+    ckpt_every: int = 0           # fuzzy checkpoint every N commits (0=off)
 
     @staticmethod
     def ladder():
-        """The paper's incremental configurations (Fig. 5), in order."""
+        """The paper's incremental configurations (Fig. 5), in order,
+        extended with the Fig. 9 durability rungs."""
         base = dict(pool_frames=8192)
         return [
             EngineConfig("posix", n_fibers=1, batch_evict=False,
@@ -69,11 +109,67 @@ class EngineConfig:
                          adaptive_batch=True, fixed_bufs=True,
                          passthrough=True, iopoll=True, sqpoll=True,
                          **base),
+            EngineConfig("+WAL", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, durability="wal", **base),
+            EngineConfig("+GroupCommit", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         durability="group", **base),
+            EngineConfig("+PassthruFlush", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         passthrough=True, durability="passthru-flush",
+                         **base),
         ]
 
 
+class Txn:
+    """One transaction's handle.  Under a durable rung, writes are
+    buffered (deferred apply) and logged as intents; without a WAL the
+    calls pass straight through to the tree, so the original ladder
+    rungs behave exactly as before."""
+
+    __slots__ = ("engine", "id", "writes", "_began", "done")
+
+    def __init__(self, engine: "StorageEngine", txn_id: int):
+        self.engine = engine
+        self.id = txn_id
+        self.writes: List[Tuple[int, bytes, int]] = []   # key, val, rtype
+        self._began = False
+        self.done = False
+
+    def lookup(self, key: int) -> Generator:
+        for k, v, _ in reversed(self.writes):     # read-your-writes
+            if k == key:
+                return v
+        out = yield from self.engine.tree.lookup(key)
+        return out
+
+    def update(self, key: int, value: bytes) -> Generator:
+        e = self.engine
+        if e.wal is None:
+            ok = yield from e.tree.update(key, value)
+            return ok
+        self._intent(RecordType.UPDATE, key, value)
+        return True
+
+    def insert(self, key: int, value: bytes) -> Generator:
+        e = self.engine
+        if e.wal is None:
+            ok = yield from e.tree.insert(key, value)
+            return ok
+        self._intent(RecordType.INSERT, key, value)
+        return True
+
+    def _intent(self, rtype: int, key: int, value: bytes) -> None:
+        wal = self.engine.wal
+        if not self._began:
+            wal.append(encode_record(RecordType.BEGIN, self.id))
+            self._began = True
+        wal.append(encode_kv(rtype, self.id, key, value))
+        self.writes.append((key, value, rtype))
+
+
 class StorageEngine:
-    """Timeline + ring + pool + B-tree, wired per EngineConfig."""
+    """Timeline + ring + pool + B-tree (+ WAL), wired per EngineConfig."""
 
     def __init__(self, cfg: EngineConfig, *, n_tuples: int = 200_000,
                  spec: Optional[NVMeSpec] = None, seed: int = 0):
@@ -94,11 +190,12 @@ class StorageEngine:
         from repro.storage.btree import leaf_fanout
         est_pages = int(n_tuples / max(1, int(
             leaf_fanout(cfg.page_size, cfg.value_size) * 0.8)) * 1.3) + 64
+        spec = spec or NVMeSpec()
         disk = SimDisk(self.tl, est_pages * cfg.page_size * 2,
-                       spec=spec or NVMeSpec(),
+                       spec=spec,
                        filesystem=not cfg.passthrough)
         self.disk = disk
-        self.ring.register_device(3, disk)
+        self.ring.register_device(DATA_FD, disk)
         root, next_pid = bulk_load(disk.image, keys, vals,
                                    page_size=cfg.page_size,
                                    value_size=cfg.value_size)
@@ -106,12 +203,143 @@ class StorageEngine:
         self.pool = BufferPool(self.ring, PoolConfig(
             n_frames=cfg.pool_frames, page_size=cfg.page_size,
             batch_evict=cfg.batch_evict, evict_batch=cfg.evict_batch,
-            fixed_bufs=cfg.fixed_bufs, passthrough=cfg.passthrough, fd=3))
+            fixed_bufs=cfg.fixed_bufs, passthrough=cfg.passthrough,
+            fd=DATA_FD))
         self.tree = BTree(self.pool, root, next_pid,
                           value_size=cfg.value_size)
         policy = AdaptiveBatcher() if cfg.adaptive_batch else EagerSubmit()
         self.sched = FiberScheduler(self.ring, policy=policy)
         self.n_tuples = n_tuples
+
+        # ---------------------------------------------- durability rung
+        mode = _DURABILITY_MODES[cfg.durability]
+        self.wal: Optional[WriteAheadLog] = None
+        self.gc: Optional[GroupCommit] = None
+        self.log_disk: Optional[SimDisk] = None
+        self.committed: List[int] = []
+        self.checkpoints = 0
+        self._txn_ids = itertools.count(1)
+        if mode is not None:
+            self.log_disk = SimDisk(
+                self.tl, cfg.log_capacity, spec=spec,
+                filesystem=(mode != "passthru"))
+            self.ring.register_device(LOG_FD, self.log_disk)
+            self.wal = WriteAheadLog(
+                self.ring, LOG_FD, self.log_disk, mode=mode,
+                buf_base=cfg.pool_frames if cfg.fixed_bufs else None,
+                header=LogHeader(root=root, next_pid=next_pid,
+                                 page_size=cfg.page_size,
+                                 value_size=cfg.value_size,
+                                 data_capacity=len(disk.image)))
+            if cfg.fixed_bufs:
+                # one registered-buffer table: pool frames first, then
+                # the WAL's 4 KiB-aligned staging slots
+                self.ring.register_buffers(self.pool.frames +
+                                           self.wal.staging)
+            self.pool.wal = self.wal
+            if cfg.durability in ("group", "passthru-flush"):
+                self.gc = GroupCommit(self.wal, mode=mode)
+
+    # ------------------------------------------------------ transactions
+
+    def begin(self) -> Txn:
+        return Txn(self, next(self._txn_ids))
+
+    def commit(self, txn: Txn) -> Generator:
+        """Make ``txn`` durable; suspends the calling fiber until its
+        COMMIT record's LSN is covered by an fsync, then applies the
+        write-set to the tree (deferred apply — see repro.wal)."""
+        wal = self.wal
+        if wal is None or txn.done:
+            txn.done = True
+            return
+        txn.done = True
+        if not txn.writes:                      # read-only: nothing to do
+            return
+        t0 = self.tl.now
+        wal.append(encode_record(RecordType.COMMIT, txn.id))
+        end = wal.end_lsn
+        if self.gc is not None:
+            yield from self.gc.commit(end)
+        else:                                   # +WAL: per-txn write+fsync
+            yield from wal.flush_solo()
+            wal.stats.groups.append(1)
+        wal.stats.commits += 1
+        wal.stats.commit_wait_s += self.tl.now - t0
+        self.committed.append(txn.id)           # durable: ack the commit
+        yield from self._apply(txn)
+
+    def abort(self, txn: Txn) -> Generator:
+        txn.done = True
+        if self.wal is not None and txn._began:
+            self.wal.append(encode_record(RecordType.ABORT, txn.id))
+        txn.writes = []
+        return
+        yield                                   # (keeps this a generator)
+
+    def _apply(self, txn: Txn) -> Generator:
+        """Apply the committed write-set to the B-tree.  Each tree op
+        emits one APPLY record — physiological deltas for in-place leaf
+        upserts, full page images for split-touched pages — and stamps
+        the touched pages' LSNs, all inside the op's no-yield window so
+        the snapshot is consistent."""
+        wal, pool, tree = self.wal, self.pool, self.tree
+        for key, value, rtype in txn.writes:
+            ops = []                            # per-call oplog: fibers
+            if rtype == RecordType.INSERT:      # suspend mid-traversal
+                yield from tree.insert(key, value, oplog=ops)
+            else:
+                yield from tree.update(key, value, oplog=ops)
+            # -- no suspension between here and the end of the loop body
+            lsn = wal.end_lsn                   # LSN of the upcoming rec
+            entries = []
+            for op in ops:
+                if op[0] == "upsert":
+                    _, pid, k, v = op
+                    idx = pool.table[pid]
+                    pool.stamp_lsn(idx, lsn)
+                    entries.append((APPLY_DELTA, pid, _kv_bytes(k, v)))
+                else:                           # ("img", pid)
+                    _, pid = op
+                    idx = pool.table[pid]
+                    pool.stamp_lsn(idx, lsn)
+                    entries.append((APPLY_IMG, pid,
+                                    bytes(pool.page(idx))))
+            wal.append(encode_apply(txn.id, tree.root, tree.next_pid,
+                                    entries))
+        wal.append(encode_record(RecordType.APPLY_END, txn.id))
+
+    def checkpoint(self) -> Generator:
+        """Flush-checkpoint: write back the currently-dirty pages (kept
+        resident), then log root/next_pid + the residual dirty-page
+        table and flush.  Transactions keep running throughout (fuzzy
+        w.r.t. commits); the residual DPT only holds pages dirtied
+        while the flush was in flight, so its min recLSN gives recovery
+        a tight redo starting point."""
+        wal = self.wal
+        assert wal is not None
+        # bounded passes: under a heavy write load new pages keep
+        # dirtying while we flush — don't chase them forever
+        max_passes = self.cfg.pool_frames // max(1,
+                                                 self.cfg.evict_batch) + 4
+        for _ in range(max_passes):
+            n = yield from self.pool.clean_some()
+            if n == 0:
+                break
+        dpt = self.pool.dirty_page_table()
+        wal.append(encode_checkpoint(self.tree.root, self.tree.next_pid,
+                                     dpt))
+        yield from wal.flush_to(wal.end_lsn)
+        self.checkpoints += 1
+
+    # ------------------------------------------------------ crash / run
+
+    def crash_images(self) -> Tuple[bytes, bytes]:
+        """Simulate power loss: freeze both device images as they are
+        RIGHT NOW (in-flight writes included — the CRC framing and the
+        commit protocol are what recovery relies on, not timing luck)."""
+        assert self.log_disk is not None, "durability is off"
+        return bytes(self.disk.image), bytes(self.log_disk.image)
 
     def run_fibers(self, make_txn, n_txns: int) -> dict:
         """Run n_txns transactions across cfg.n_fibers worker fibers.
@@ -127,9 +355,14 @@ class StorageEngine:
         t0 = self.tl.now
         for _ in range(self.cfg.n_fibers):
             self.sched.spawn(worker())
+        if self.wal is not None and self.cfg.ckpt_every > 0:
+            self.sched.spawn(self._checkpointer(counter, n_txns))
+        if self.wal is not None:
+            self.sched.spawn(self.page_cleaner(
+                stop=lambda: counter["done"] >= n_txns))
         self.sched.run()
         dt = self.tl.now - t0
-        return {
+        out = {
             "config": self.cfg.name,
             "txns": counter["done"],
             "sim_seconds": dt,
@@ -144,3 +377,47 @@ class StorageEngine:
             "app_cpu_s": self.ring.stats.cpu_seconds_app,
             "sqpoll_cpu_s": self.ring.stats.cpu_seconds_sqpoll,
         }
+        if self.wal is not None:
+            ws = self.wal.stats
+            out.update({
+                "commits": ws.commits,
+                "fsyncs": ws.fsyncs,
+                "fsyncs_per_txn": ws.fsyncs / max(1, ws.commits),
+                "group_size": ws.mean_group(),
+                "commit_wait_us": ws.mean_commit_wait_s() * 1e6,
+                "log_mb": ws.bytes_appended / 1e6,
+                "wal_evict_waits": self.pool.wal_waits,
+                "checkpoints": self.checkpoints,
+            })
+        return out
+
+    def _checkpointer(self, counter, n_txns: int) -> Generator:
+        last = 0
+        every = self.cfg.ckpt_every
+        while counter["done"] < n_txns:
+            if len(self.committed) - last >= every:
+                last = len(self.committed)
+                yield from self.checkpoint()
+            else:
+                yield None
+
+    def page_cleaner(self, stop=None) -> Generator:
+        """Background writer: when the free list runs low, evict a batch
+        (writing dirty pages back under WAL-before-data) so B-tree
+        splits — which cannot suspend — always find a clean frame even
+        when the whole working set is pool-resident."""
+        pool = self.pool
+        low = max(2 * pool.cfg.evict_batch, pool.cfg.n_frames // 16)
+        while stop is None or not stop():
+            if len(pool.free) < low:
+                n = yield from pool.evict_some()
+                if n == 0:
+                    yield None
+            else:
+                yield None
+
+
+def _kv_bytes(key: int, value: bytes) -> bytes:
+    """The <qH>key,vlen + value payload shared with the intent records
+    (see repro.wal.log.decode_kv)."""
+    return _struct.pack("<qH", key, len(value)) + value

@@ -4,6 +4,12 @@ Scaled down from the paper's 10M tuples / 1 GB pool, keeping the SAME
 pool:data ratio (~30%) so the ~70% page-fault probability under uniform
 access carries over. The CPU cost of transaction logic is charged
 explicitly with the paper's measured constant (c_tx = 8 264 cycles).
+
+All write transactions go through the engine's ``begin``/``commit`` API
+and therefore emit WAL records when the engine runs on a durability
+rung (``+WAL``/``+GroupCommit``/``+PassthruFlush`` — see ``repro.wal``);
+on the non-durable rungs the Txn handle passes straight through to the
+B-tree and behaviour is unchanged.
 """
 
 from __future__ import annotations
@@ -20,8 +26,10 @@ def ycsb_update_txn(engine, rng):
     key = int(rng.integers(0, engine.n_tuples))
     val = bytes(engine.cfg.value_size)
     engine.tl.run_until(engine.tl.now + C_TX_S)   # charge tx logic
-    ok = yield from engine.tree.update(key, val)
+    t = engine.begin()
+    ok = yield from t.update(key, val)
     assert ok, f"missing key {key}"
+    yield from engine.commit(t)
 
 
 def ycsb_read_txn(engine, rng):
@@ -67,24 +75,28 @@ class TPCCLite:
         e = self.e
         w = int(rng.integers(0, self.W))
         e.tl.run_until(e.tl.now + 2 * C_TX_S)     # heavier logic than YCSB
+        t = e.begin()
         c = int(rng.integers(0, self.CUST_PER_WH))
-        v = yield from e.tree.lookup(self.key_cust(w, c))
+        v = yield from t.lookup(self.key_cust(w, c))
         n_items = int(rng.integers(5, 16))
         val = bytes(e.cfg.value_size)
         for _ in range(n_items):
             i = int(rng.integers(0, self.ITEMS_PER_WH))
-            yield from e.tree.update(self.key_stock(w, i), val)
+            yield from t.update(self.key_stock(w, i), val)
         self.order_seq += 1
-        yield from e.tree.insert(self.order_seq, val)
+        yield from t.insert(self.order_seq, val)
+        yield from e.commit(t)
 
     def payment(self, rng):
         e = self.e
         w = int(rng.integers(0, self.W))
         e.tl.run_until(e.tl.now + C_TX_S)
+        t = e.begin()
         c = int(rng.integers(0, self.CUST_PER_WH))
         val = bytes(e.cfg.value_size)
-        yield from e.tree.update(self.key_cust(w, c), val)
-        yield from e.tree.update(self.key_stock(w, 0), val)
+        yield from t.update(self.key_cust(w, c), val)
+        yield from t.update(self.key_stock(w, 0), val)
+        yield from e.commit(t)
 
     def order_status(self, rng):
         e = self.e
@@ -99,12 +111,14 @@ class TPCCLite:
     def delivery(self, rng):
         e = self.e
         e.tl.run_until(e.tl.now + 2 * C_TX_S)
+        t = e.begin()
         val = bytes(e.cfg.value_size)
         base = e.n_tuples + 1_000_000
         # mark up to 10 oldest undelivered orders
         for oid in range(max(base + 1, self.order_seq - 10),
                          self.order_seq + 1):
-            yield from e.tree.update(oid, val)
+            yield from t.update(oid, val)
+        yield from e.commit(t)
 
     def stock_level(self, rng):
         e = self.e

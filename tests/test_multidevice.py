@@ -16,8 +16,8 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     # --- shard_map all-to-all dispatch/combine round trip -----------------
     from repro.distributed.a2a import moe_dispatch_combine

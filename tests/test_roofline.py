@@ -25,7 +25,10 @@ def test_scan_trip_count_multiplication():
     rep = hlo_cost.analyze(comp.as_text())
     expect = 12 * 2 * 8 * 16 * 16
     assert rep.dot_flops == expect
-    xla = comp.cost_analysis().get("flops", 0.0)
+    ca = comp.cost_analysis()        # older jax returns [dict], newer dict
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    xla = ca.get("flops", 0.0)
     assert xla < expect              # the very bug we work around
 
 
@@ -81,8 +84,8 @@ def test_partitioning_rules():
     from repro.models.partitioning import (batch_axes_for, rules_for,
                                            spec_for)
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     assert spec_for(("embed", "mlp"), mesh) == P("data", "model")
     assert spec_for(("kv_heads",), mesh) == P(None)
 

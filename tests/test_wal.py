@@ -1,0 +1,359 @@
+"""WAL subsystem: group-commit batching, Fig. 9 path ordering, log
+framing, WAL-before-data eviction ordering, and the crash-recovery
+property test (kill the engine at an arbitrary point mid-workload, run
+recovery, assert every acknowledged txn is visible and nothing else
+leaks)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.bufferpool.pool import PAGE_LSN_OFF
+from repro.core import NVMeSpec
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
+from repro.wal import recover, scan_log
+from repro.wal.log import RecordType, read_header
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+CONSUMER = dict(plp=False, fsync_lat=1.2e-3)
+
+
+def make_engine(durability, *, n_fibers=128, n_tuples=20_000,
+                frames=1024, spec=None, ckpt_every=0, fixed_bufs=None):
+    name = {"wal": "+WAL", "group": "+GroupCommit",
+            "passthru-flush": "+PassthruFlush",
+            "none": "+BatchSubmit"}[durability]
+    cfg = EngineConfig(
+        name, n_fibers=n_fibers, pool_frames=frames,
+        durability=durability,
+        fixed_bufs=(durability in ("group", "passthru-flush")
+                    if fixed_bufs is None else fixed_bufs),
+        passthrough=(durability == "passthru-flush"),
+        ckpt_every=ckpt_every)
+    return StorageEngine(cfg, n_tuples=n_tuples, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# log framing
+# ---------------------------------------------------------------------------
+
+def test_log_framing_roundtrip_and_torn_tail():
+    eng = make_engine("wal", n_fibers=4)
+    res = eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 16)
+    _, log = eng.crash_images()
+    hdr = read_header(log)
+    assert hdr.page_size == 4096 and hdr.value_size == 120
+    recs = scan_log(log)
+    assert recs, "no records decoded"
+    types = {r.type for r in recs}
+    assert RecordType.COMMIT in types and RecordType.UPDATE in types
+    # corrupt one byte mid-log: scan must stop at the torn record, not
+    # crash, and everything before it must still decode
+    cut = recs[len(recs) // 2]
+    torn = bytearray(log)
+    torn[cut.lsn + 8] ^= 0xFF
+    recs2 = scan_log(bytes(torn))
+    assert [r.lsn for r in recs2] == [r.lsn for r in recs
+                                      if r.lsn < cut.lsn]
+
+
+# ---------------------------------------------------------------------------
+# group commit
+# ---------------------------------------------------------------------------
+
+def test_group_commit_amortizes_fsyncs():
+    """Acceptance: >=4x fewer fsyncs than per-txn commit at 128 fibers."""
+    n = 512
+    per_txn = make_engine("wal", n_fibers=128)
+    r1 = per_txn.run_fibers(lambda rng: ycsb_update_txn(per_txn, rng), n)
+    grouped = make_engine("group", n_fibers=128)
+    r2 = grouped.run_fibers(lambda rng: ycsb_update_txn(grouped, rng), n)
+    assert r1["commits"] == r2["commits"] == n
+    assert r1["fsyncs"] >= n                 # one (or more) per commit
+    assert r2["fsyncs"] * 4 <= r1["fsyncs"]
+    assert r2["group_size"] >= 4.0
+
+
+def test_commit_not_acked_before_durable():
+    eng = make_engine("group", n_fibers=8)
+    eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 64)
+    wal = eng.wal
+    assert len(eng.committed) == 64
+    # every acked commit's record must be below the durable horizon OR
+    # have been applied — durable_lsn must cover all COMMIT records of
+    # acked txns at the moment of ack; at quiescence both hold:
+    _, log = eng.crash_images()
+    commits = {r.txn for r in scan_log(log) if r.type == RecordType.COMMIT}
+    assert set(eng.committed) <= commits
+    assert wal.stats.fsyncs > 0
+
+
+def test_fig9_path_ordering_end_to_end():
+    """Passthrough flush (PLP) < linked write->fsync < write+fsync, in
+    per-commit latency on the same enterprise array (paper Fig. 9)."""
+    lat = {}
+    for dur, spec_kw in [("wal", ENTERPRISE), ("group", ENTERPRISE),
+                         ("passthru-flush", ENTERPRISE)]:
+        eng = make_engine(dur, n_fibers=1, spec=NVMeSpec(**spec_kw))
+        res = eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 48)
+        lat[dur] = res["commit_wait_us"]
+    assert lat["passthru-flush"] < lat["group"] < lat["wal"], lat
+
+
+def test_fsync_path_attribution():
+    """The fsync CQE path matches the device: worker fallback on a
+    filesystem log, polled/async completion for NVMe passthrough flush."""
+    e1 = make_engine("wal", n_fibers=8)
+    e1.run_fibers(lambda rng: ycsb_update_txn(e1, rng), 32)
+    assert e1.wal.stats.fsync_worker == e1.wal.stats.fsyncs
+    e2 = make_engine("passthru-flush", n_fibers=8)
+    e2.run_fibers(lambda rng: ycsb_update_txn(e2, rng), 32)
+    assert e2.wal.stats.fsync_worker == 0
+    assert e2.wal.stats.fsync_polled == e2.wal.stats.fsyncs
+
+
+# ---------------------------------------------------------------------------
+# WAL-before-data ordering
+# ---------------------------------------------------------------------------
+
+def test_eviction_waits_for_wal_durability():
+    """A dirty page whose APPLY record is not yet durable cannot be
+    written back: force heavy eviction with a tiny pool and check the
+    pool had to flush the WAL, and that by quiescence every on-disk
+    page's LSN is covered by the durable horizon."""
+    eng = make_engine("group", n_fibers=64, n_tuples=30_000, frames=96)
+    eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 600)
+    assert eng.pool.writebacks > 0
+    wal = eng.wal
+    data, _ = eng.crash_images()
+    ps = eng.cfg.page_size
+    max_disk_lsn = 0
+    for pid in range(len(data) // ps):
+        lsn = struct.unpack_from("<Q", data, pid * ps + PAGE_LSN_OFF)[0]
+        max_disk_lsn = max(max_disk_lsn, lsn)
+    assert max_disk_lsn <= wal.durable_lsn
+    assert max_disk_lsn > 0, "no stamped page ever reached disk"
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+def _crash_workload(eng, n_fibers, keys_per_fiber, abort_every=5):
+    """Each fiber owns a disjoint key slice and writes values encoding
+    (txn_id); every ``abort_every``-th txn aborts.  Returns bookkeeping
+    dicts filled in as the workload runs."""
+    acked = []                       # txn ids acked durable, in order
+    expect = {}                      # key -> value of last ACKED writer
+    staged = {}                      # txn -> list[(key, value)]
+    aborted = []
+
+    def fiber(fid):
+        rng = np.random.default_rng(1000 + fid)
+        lo = fid * keys_per_fiber
+        i = 0
+        while True:
+            i += 1
+            t = eng.begin()
+            nw = int(rng.integers(1, 4))
+            writes = []
+            for _ in range(nw):
+                key = lo + int(rng.integers(0, keys_per_fiber))
+                val = struct.pack("<qq", t.id, key)
+                val += bytes(eng.cfg.value_size - len(val))
+                yield from t.update(key, val)
+                writes.append((key, val))
+            staged[t.id] = writes
+            if i % abort_every == 0:
+                yield from eng.abort(t)
+                aborted.append(t.id)
+                continue
+            yield from eng.commit(t)
+            acked.append(t.id)
+            for key, val in writes:
+                expect[key] = val
+
+    return fiber, acked, expect, staged, aborted
+
+
+@pytest.mark.parametrize("crash_seed", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_crash_recovery_property(crash_seed):
+    """Kill the engine at a pseudo-random point mid-workload; after
+    redo recovery every acknowledged txn must be visible, no aborted
+    txn may leak, and B-tree invariants must hold."""
+    rng = np.random.default_rng(crash_seed)
+    eng = make_engine("group", n_fibers=32, n_tuples=8_000, frames=128,
+                      ckpt_every=40)
+    fiber, acked, expect, staged, aborted = _crash_workload(
+        eng, 32, keys_per_fiber=8_000 // 32)
+    for fid in range(32):
+        eng.sched.spawn(fiber(fid))
+    # run a random number of scheduler steps, then pull the plug
+    budget = {"left": int(rng.integers(500, 20_000))}
+
+    def out_of_budget():
+        budget["left"] -= 1
+        return budget["left"] <= 0
+    eng.sched.run(until=out_of_budget)
+    data, log = eng.crash_images()
+
+    rec, rep = recover(data, log, pool_frames=512)
+    # 1. acked txns are winners and their writes are visible
+    assert set(acked) <= rep.winners
+    got = rec.get_many(sorted(expect))
+    for key, val in expect.items():
+        v = got[key]
+        if v == val:
+            continue
+        # exception: the fiber's in-flight txn may have its COMMIT
+        # record durable without being acked — an allowed overwrite,
+        # but only by a LATER winner that staged exactly this value
+        assert v is not None, f"acked write to key {key} lost"
+        w = struct.unpack_from("<q", v)[0]
+        last = struct.unpack_from("<q", val)[0]
+        assert (w in rep.winners and w > last and
+                (key, v) in staged.get(w, [])), \
+            f"acked write to key {key} lost (found writer {w})"
+    # 2. no aborted txn leaks: any recovered value must come from a
+    #    winner (unacked-but-durable commits are allowed) or be initial
+    for a in aborted:
+        assert a not in rep.winners
+    probe = sorted({k for ws in staged.values() for k, _ in ws})
+    got = rec.get_many(probe)
+    for key in probe:
+        v = got[key]
+        assert v is not None
+        writer = struct.unpack_from("<q", v)[0]
+        if writer != 0:              # 0 = initial bulk-loaded value? no:
+            # initial values are random bytes; treat any txn-id outside
+            # the winner set as a leak only if it matches a known txn
+            if writer in staged:
+                assert writer in rep.winners, \
+                    f"txn {writer} leaked into key {key}"
+    # 3. B-tree invariants: full key range reachable and sorted
+    _check_tree(rec)
+
+
+def _check_tree(rec):
+    """Walk the recovered tree: every reachable leaf is sorted, keys
+    are unique across leaves, and lookups succeed for boundary keys."""
+    seen = []
+
+    def walk(pid):
+        from repro.storage.btree import _Node
+        idx = yield from rec.pool.fix(pid)
+        node = _Node(rec.pool.page(idx), rec.pool.cfg.page_size,
+                     rec.tree.value_size)
+        n = node.nkeys
+        keys = node.keys()[:n].copy()
+        if node.is_leaf:
+            assert np.all(np.diff(keys) > 0), "unsorted leaf"
+            seen.extend(int(k) for k in keys)
+            rec.pool.unfix(idx)
+            return
+        children = node.children()[:n + 1].copy()
+        rec.pool.unfix(idx)
+        for c in children:
+            yield from walk(int(c))
+
+    rec.run(walk(rec.tree.root))
+    assert len(seen) == len(set(seen)), "duplicate keys across leaves"
+    assert len(seen) >= 8_000, "committed keys missing from the tree"
+
+
+def test_recovery_with_inserts_and_splits():
+    """TPC-C-style inserts force leaf splits; crash mid-run and verify
+    the split pages recover (full-page-image redo path)."""
+    eng = make_engine("group", n_fibers=16, n_tuples=4_000, frames=256)
+    base = eng.n_tuples + 1_000
+    inserted = []
+
+    def fiber(fid):
+        # 30 inserts per fiber: enough to split the rightmost leaves
+        # several times while staying inside the disk capacity
+        for seq in range(1, 31):
+            t = eng.begin()
+            key = base + fid * 100_000 + seq
+            val = struct.pack("<qq", t.id, key)
+            val += bytes(eng.cfg.value_size - len(val))
+            yield from t.insert(key, val)
+            yield from eng.commit(t)
+            inserted.append((key, val))
+
+    for fid in range(16):
+        eng.sched.spawn(fiber(fid))
+    eng.sched.spawn(eng.page_cleaner())     # splits need clean frames
+    budget = {"left": 3_000}
+
+    def done():
+        budget["left"] -= 1
+        return budget["left"] <= 0
+    eng.sched.run(until=done)
+    assert len(inserted) > 30
+    data, log = eng.crash_images()
+    rec, rep = recover(data, log, pool_frames=512)
+    got = rec.get_many([k for k, _ in inserted])
+    for key, val in inserted:
+        assert got[key] == val, f"acked insert {key} lost"
+
+
+def test_large_flush_span_survives_staging_overflow():
+    """Regression: a group-commit flush span larger than the registered
+    staging capacity (8 slots x 32 KiB) must not recycle a slot while
+    its write is still pending in the linked chain — every record must
+    decode after a crash."""
+    cfg = EngineConfig("+GroupCommit", n_fibers=128, pool_frames=2048,
+                       durability="group", fixed_bufs=True,
+                       value_size=1000)
+    eng = StorageEngine(cfg, n_tuples=20_000,
+                        spec=NVMeSpec(plp=False, fsync_lat=1.2e-3))
+    eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 600)
+    wal = eng.wal
+    _, log = eng.crash_images()
+    recs = scan_log(log)
+    assert recs[-1].end >= wal.durable_lsn, \
+        "durable log bytes no longer decode (staging slot recycled)"
+    commits = {r.txn for r in recs if r.type == RecordType.COMMIT}
+    assert set(eng.committed) <= commits
+
+
+def test_checkpoint_bounds_redo():
+    """The fuzzy checkpoint's dirty-page table must let recovery skip
+    APPLY records whose effects were flushed before the checkpoint."""
+    eng = make_engine("group", n_fibers=32, n_tuples=10_000, frames=256,
+                      ckpt_every=100)
+    eng.run_fibers(lambda rng: ycsb_update_txn(eng, rng), 500)
+    assert eng.checkpoints > 0
+    data, log = eng.crash_images()
+    rec, rep = recover(data, log)
+    assert rep.checkpoint_lsn is not None
+    assert rep.redo_start > 0
+    assert rep.applies_before_ckpt > 0, \
+        "checkpoint bought no redo skipping"
+    # and the final state is still exactly the committed state
+    probe = rec.get(0)
+    assert probe is not None
+
+
+def test_recovery_clean_shutdown_is_noop_visible():
+    """No crash: recovery of a quiesced engine reproduces exactly the
+    final committed state."""
+    eng = make_engine("wal", n_fibers=16, n_tuples=5_000, frames=512)
+    vals = {}
+
+    def txn(rng):
+        t = eng.begin()
+        key = int(rng.integers(0, eng.n_tuples))
+        val = struct.pack("<q", t.id) + bytes(eng.cfg.value_size - 8)
+        yield from t.update(key, val)
+        yield from eng.commit(t)
+        vals[key] = val
+    eng.run_fibers(txn, 200)
+    data, log = eng.crash_images()
+    rec, rep = recover(data, log)
+    assert not rep.losers
+    got = rec.get_many(sorted(vals))
+    for k, v in vals.items():
+        assert got[k] == v

@@ -114,7 +114,9 @@ def run():
                 sqe = ra.get_sqe()
                 R.prep_send(sqe, 4, size, user_data=1, zero_copy=zc)
                 ra.submit()
-                ra.wait_cqe()
+                # SEND_ZC posts two CQEs: completion (MORE) + the
+                # deferred buffer-release ZC_NOTIF
+                ra.wait_cqes(2 if zc else 1)
             cpb = ra.stats.cpu_seconds_app * 3.7e9 / (n * size)
             label = "zc" if zc else "copy"
             emit(f"fig16/send/{label}/size={size}/cycles_per_byte",

@@ -2,6 +2,11 @@
 
 Prints ``name,value,derived`` CSV rows (plus section comments).
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig5,fig11]
+                                               [--smoke]
+
+``--smoke`` runs every module at tiny sizes (~30 s total) so CI can
+verify the bench modules still import and execute end-to-end —
+scripts/check.sh runs it after the test suite.
 """
 
 import argparse
@@ -23,11 +28,23 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
+#: per-module kwargs for --smoke; modules without an entry are cheap
+#: enough to run with their defaults (a few seconds each)
+SMOKE_KW = {
+    "fig5": {"n_txns": 120},
+    "fig6": {"n_txns": 60},
+    "fig9wal": {"n_txns": 96},
+    "fig11-14": {"smoke": True},
+    "fig17": {"n_txns": 120},
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated module keys to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: exercise every module quickly")
     args = ap.parse_args()
     only = set(k for k in args.only.split(",") if k)
 
@@ -38,7 +55,8 @@ def main() -> None:
             continue
         t0 = time.time()
         mod = importlib.import_module(modname)
-        mod.run()
+        kw = SMOKE_KW.get(key, {}) if args.smoke else {}
+        mod.run(**kw)
         print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t00:.1f}s", flush=True)
 

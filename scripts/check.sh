@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# One-step verify entrypoint: runs the tier-1 test suite exactly as the
-# ROADMAP specifies.  Usage: scripts/check.sh [extra pytest args]
+# One-step verify entrypoint:
+#   1. the tier-1 test suite exactly as the ROADMAP specifies
+#   2. a fast-mode benchmark smoke (tiny sizes) so bench modules can't
+#      silently rot — every paper-figure module must import and run
+# Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

@@ -11,11 +11,12 @@ from repro.core.backends import (FileBackend, NICSpec, NVMeSpec, SimNVMe,
                                  SimNetwork, SimSocket)
 from repro.core.clock import CpuTimer, RealClock, VirtualClock
 from repro.core.costs import DEFAULT_COSTS, CostModel
-from repro.core.fibers import Fiber, FiberScheduler, IoRequest
-from repro.core.ring import (IoUring, prep_fsync, prep_nop, prep_read,
-                             prep_read_fixed, prep_recv, prep_send,
-                             prep_timeout, prep_uring_cmd, prep_write,
-                             prep_write_fixed)
+from repro.core.fibers import (Fiber, FiberScheduler, IoRequest, StreamClose,
+                               StreamRead)
+from repro.core.ring import (BufferRing, IoUring, prep_fsync, prep_nop,
+                             prep_read, prep_read_fixed, prep_recv,
+                             prep_send, prep_timeout, prep_uring_cmd,
+                             prep_write, prep_write_fixed)
 from repro.core.sqe import (CQE, SQE, CqeFlags, Op, RingStats, SetupFlags,
                             SqeFlags)
-from repro.core.timeline import Timeline
+from repro.core.timeline import CoreClock, Timeline

@@ -134,26 +134,58 @@ class NICSpec:
     base_lat: float = 9e-6           # one-way small-message latency
     zc_send_threshold: int = 1 * KiB  # below: zero-copy loses (Fig. 16)
     zc_recv_threshold: int = 1 * KiB
+    untuned_factor: float = 0.75     # Fig. 14: flow imbalance on an
+                                     # untuned qdisc/socket-buffer stack
 
 
 class SimNetwork:
     """A cluster of nodes with full-duplex links; ``SimSocket`` endpoints
-    are created in connected pairs. Per-direction link bandwidth is
-    enforced with next-free-time pacing (bisection bandwidth = n×2×bw)."""
+    are created in connected pairs.
 
-    def __init__(self, timeline, n_nodes: int, spec: NICSpec = NICSpec()):
+    Pacing model (paper §4.4, Fig. 14): the sender's NIC is one tx lane
+    at the full link rate; the receive side is a *fair-share* lane per
+    (dst, src) flow at ``bw / (n_nodes - 1)`` — TCP fairness across the
+    all-to-all mesh, which the paper's qdisc/socket-buffer tuning is
+    what makes fair.  An untuned stack loses ``1 - untuned_factor`` of
+    effective bandwidth to flow imbalance.  ``flow_schedule`` is pure
+    clock arithmetic over explicit start times, so the analytical
+    shuffle oracle (``shuffle.sim``) and the ring runtime's
+    ``SimSocket`` share one link model."""
+
+    def __init__(self, timeline, n_nodes: int, spec: NICSpec = NICSpec(),
+                 *, tuned: bool = True):
         self.tl = timeline
+        self.n_nodes = n_nodes
         self.spec = spec
+        self.tuned = tuned
         self.tx_free = [0.0] * n_nodes
-        self.rx_free = [0.0] * n_nodes
+        self.rx_flow_free: Dict[Tuple[int, int], float] = {
+            (d, s): 0.0 for d in range(n_nodes) for s in range(n_nodes)}
+
+    def effective_bw(self) -> float:
+        return self.spec.bw * (1.0 if self.tuned
+                               else self.spec.untuned_factor)
+
+    def flow_schedule(self, src: int, dst: int, nbytes: int,
+                      t_start: float) -> Tuple[float, float]:
+        """Pace one transfer; returns ``(t_tx_done, t_arrive)``.
+
+        ``t_tx_done`` is when the sender NIC has drained the buffer
+        (SEND_ZC buffer release); ``t_arrive`` is when the last byte is
+        available at the receiver."""
+        bw = self.effective_bw()
+        tx0 = max(t_start, self.tx_free[src])
+        self.tx_free[src] = tx0 + nbytes / bw
+        flow_bw = bw / max(1, self.n_nodes - 1)
+        rx0 = max(self.rx_flow_free[(dst, src)], tx0)
+        self.rx_flow_free[(dst, src)] = rx0 + nbytes / flow_bw
+        return self.tx_free[src], \
+            self.rx_flow_free[(dst, src)] + self.spec.base_lat
 
     def xfer_time(self, src: int, dst: int, nbytes: int) -> float:
-        sp = self.spec
-        t0 = max(self.tl.now, self.tx_free[src], self.rx_free[dst])
-        dt = nbytes / sp.bw
-        self.tx_free[src] = t0 + dt
-        self.rx_free[dst] = t0 + dt
-        return (t0 + dt + sp.base_lat) - self.tl.now
+        """Delay from now until arrival (legacy single-transfer API)."""
+        _, arrive = self.flow_schedule(src, dst, nbytes, self.tl.now)
+        return arrive - self.tl.now
 
 
 class SimSocket:
@@ -166,7 +198,7 @@ class SimSocket:
         self.node = node
         self.peer_node = peer_node
         self.peer: Optional["SimSocket"] = None
-        self.rx_queue: list = []          # (arrival_time, nbytes)
+        self.rx_queue: list = []          # nbytes per delivered message
         self.rx_waiters: list = []
 
     @staticmethod
@@ -175,19 +207,24 @@ class SimSocket:
         sa.peer, sb.peer = sb, sa
         return sa, sb
 
-    def service_send(self, nbytes: int) -> float:
-        """Returns completion delay; schedules delivery at the peer."""
-        dt = self.net.xfer_time(self.node, self.peer_node, nbytes)
+    def service_send(self, nbytes: int,
+                     t_start: Optional[float] = None) -> Tuple[float, float]:
+        """Pace the transfer from ``t_start`` (default: now) and schedule
+        delivery at the peer; returns absolute ``(t_tx_done, t_arrive)``.
+        ``t_tx_done`` is when the NIC has drained the send buffer — the
+        SEND_ZC notification point."""
+        if t_start is None:
+            t_start = self.net.tl.now
+        tx_done, arrive = self.net.flow_schedule(
+            self.node, self.peer_node, nbytes, t_start)
         peer = self.peer
-        arrive = self.net.tl.now + dt
 
         def deliver():
             peer.rx_queue.append(nbytes)
             for w in peer.rx_waiters[:]:
                 w()
         self.net.tl.at(arrive, deliver)
-        # send completes when the NIC has DMA'd the buffer (tx side)
-        return nbytes / self.net.spec.bw
+        return tx_done, arrive
 
     def try_recv(self) -> Optional[int]:
         if self.rx_queue:

@@ -39,6 +39,11 @@ class CostModel:
     sock_speculative: int = 900   # wasted inline attempt (POLL_FIRST skips)
     copy_per_byte: float = 1.5    # kernel copy incl. skb alloc, cycles/B
     # (crossover vs zc_setup at ~1 KiB — paper Fig. 16 threshold)
+    # beyond the first few KiB the skb set-up cost is amortized and the
+    # copy runs at streaming-memcpy rate (~40 GB/s): 1 MiB shuffle chunks
+    # cost ~28 µs to bounce, not the 425 µs a flat 1.5 cyc/B would charge
+    copy_small_bytes: int = 4_096
+    copy_bulk_per_byte: float = 0.0925
     zc_setup: int = 1_500         # zero-copy registration per op
     multishot_amort: int = 1_200  # saved per recv after the first
     # io_worker fallback (§2.2: +7.3 µs measured)
@@ -48,6 +53,14 @@ class CostModel:
 
     def s(self, cycles: float) -> float:
         return cycles / self.clock_hz
+
+    def copy_cycles(self, nbytes: int) -> float:
+        """Kernel<->user copy cost: skb-alloc rate for the head, bulk
+        streaming rate for the remainder (keeps the Fig. 16 ~1 KiB
+        zero-copy crossover while making MiB-scale bounces realistic)."""
+        head = min(nbytes, self.copy_small_bytes)
+        return self.copy_per_byte * head + \
+            self.copy_bulk_per_byte * (nbytes - head)
 
 
 DEFAULT_COSTS = CostModel()

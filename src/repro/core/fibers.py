@@ -1,4 +1,4 @@
-"""Cooperative fibers over the ring (paper §3.3.2).
+"""Cooperative fibers over the ring (paper §3.3.2 / §4.3).
 
 Each transaction runs as a generator-based fiber that yields I/O requests
 and is resumed when its completion arrives. Context switches are a Python
@@ -10,11 +10,34 @@ A fiber may yield:
   * a list of IoRequests    → resumed with the CQE list once ALL complete
     (this is how the buffer manager issues a batched eviction: N writes,
     one submission),
+  * an ``IoRequest(multishot=True)`` → resumed immediately with the
+    assigned user_data; subsequent CQEs of that op are consumed with
+    ``StreamRead`` (multishot recv: one SQE, many CQEs),
+  * ``StreamRead(ud)``      → resumed with the next CQE of stream ``ud``
+    (parks until one arrives).  A CQE without ``CqeFlags.MORE`` ends the
+    stream.  SEND_ZC's deferred ``ZC_NOTIF`` is reaped the same way:
+    the send's first CQE carries ``MORE`` and auto-opens a stream,
+  * ``StreamClose(ud)``     → cancel a still-armed multishot op,
   * ``None``                → cooperative yield (re-queued).
 
 Because all concurrency is cooperative, data structures need no locks
 (paper: the B-tree restarts traversal if the world changed across a
 suspension point — see storage/btree.py).
+
+Scheduling modes
+================
+
+*Single-core* (default, the storage engine): one ring, one virtual CPU;
+CPU charges advance the global timeline directly — exactly the paper's
+one-core buffer-manager experiments.
+
+*Multi-core* (the shuffle engine): pass ``rings=[...]`` (one per worker,
+each constructed with a ``CoreClock``) and ``cores=[...]``.  Fibers are
+pinned to a (core, ring) pair at ``spawn``.  The scheduler is a
+conservative discrete-event loop: it always resumes the runnable fiber
+whose core becomes free earliest, first draining any timeline events
+(completions, packet arrivals) that precede that point, so N cores burn
+CPU concurrently while sharing one deterministic timeline.
 """
 
 from __future__ import annotations
@@ -26,7 +49,8 @@ from typing import Any, Callable, Dict, Generator, List, Optional
 
 from repro.core.adaptive import AdaptiveBatcher, SubmitPolicy
 from repro.core.ring import IoUring
-from repro.core.sqe import CQE, SQE
+from repro.core.sqe import CQE, SQE, CqeFlags
+from repro.core.timeline import CoreClock
 
 
 @dataclass
@@ -34,14 +58,40 @@ class IoRequest:
     """What a fiber yields: a prepared-SQE builder. The scheduler assigns
     user_data and decides when the batch enters the kernel."""
     prep: Callable[[SQE, int], None]      # (sqe, user_data) -> None
+    multishot: bool = False               # one SQE -> many CQEs (stream)
+
+
+@dataclass
+class StreamRead:
+    """Yield to consume the next CQE of a multishot stream (or a
+    SEND_ZC notification)."""
+    ud: int
+
+
+@dataclass
+class StreamClose:
+    """Yield to cancel a still-armed multishot op and drop its stream."""
+    ud: int
+
+
+class _Stream:
+    __slots__ = ("q", "waiter", "done", "owner")
+
+    def __init__(self, owner: "Fiber"):
+        self.q: deque = deque()
+        self.waiter: Optional["Fiber"] = None
+        self.done = False
+        self.owner = owner
 
 
 class Fiber:
     _ids = itertools.count(1)
 
-    def __init__(self, gen: Generator):
+    def __init__(self, gen: Generator, *, core: int = 0, ring: int = 0):
         self.id = next(Fiber._ids)
         self.gen = gen
+        self.core = core                  # CoreClock index (multi-core)
+        self.ring_idx = ring              # ring index (ring-per-worker)
         self.done = False
         self.value: Any = None            # generator return value
         self._pending = 0
@@ -58,26 +108,41 @@ class FiberScheduler:
     The submit policy decides when queued SQEs enter the kernel —
     ``AdaptiveBatcher`` implements the paper's adaptive batching (§3.3.3):
     flush early when few I/Os are in flight (keep the device busy), defer
-    when many are (amortize the syscall).
+    when many are (amortize the syscall).  ``per_op_submit`` instead
+    enters the kernel once per SQE — the epoll-style one-syscall-per-I/O
+    baseline of the shuffle study (Fig. 13).
     """
 
-    def __init__(self, ring: IoUring, *,
+    def __init__(self, ring: Optional[IoUring] = None, *,
+                 rings: Optional[List[IoUring]] = None,
+                 cores: Optional[List[CoreClock]] = None,
                  policy: Optional[SubmitPolicy] = None,
-                 switch_cost_s: float = 20 / 3.7e9):
-        self.ring = ring
+                 switch_cost_s: float = 20 / 3.7e9,
+                 per_op_submit: bool = False):
+        self.rings = rings if rings is not None else [ring]
+        assert self.rings and self.rings[0] is not None
+        self.ring = self.rings[0]         # single-core alias
+        self.cores = cores
+        self.mc = cores is not None
         self.policy = policy or AdaptiveBatcher()
+        self.per_op_submit = per_op_submit
         self.ready: deque = deque()
         self.waiting: Dict[int, Fiber] = {}
+        self.streams: Dict[int, _Stream] = {}
+        self._orphans: set = set()        # closed streams whose terminal
+                                          # CQE is still in flight
         self.switch_cost_s = switch_cost_s
         self.inflight = 0
         self._queued = 0                  # SQEs prepared but not submitted
+        self._ring_queued = [0] * len(self.rings)
         self._uds = itertools.count(1)
         self.completed_fibers = 0
 
     # ------------------------------------------------------------------
 
-    def spawn(self, gen: Generator) -> Fiber:
-        f = Fiber(gen)
+    def spawn(self, gen: Generator, *, core: int = 0,
+              ring: int = 0) -> Fiber:
+        f = Fiber(gen, core=core, ring=ring)
         self.ready.append((f, None))
         return f
 
@@ -86,11 +151,15 @@ class FiberScheduler:
         while True:
             if until is not None and until():
                 return
-            if not self.ready and not self.waiting and self._queued == 0:
+            if not self.ready and not self.waiting and not self.streams \
+                    and self._queued == 0:
                 return
-            self._step()
+            if self.mc:
+                self._step_mc()
+            else:
+                self._step()
 
-    # ------------------------------------------------------------------
+    # ------------------------------------------------- single-core step
 
     _spins = 0
 
@@ -125,18 +194,80 @@ class FiberScheduler:
             cqe = self.ring.wait_cqe()
             self._dispatch(cqe)
 
+    # -------------------------------------------------- multi-core step
+
+    def _step_mc(self) -> None:
+        tl = self.ring.tl
+        if self.ready:
+            # conservative PDES: resume the fiber whose core frees
+            # earliest, but only after every timeline event before that
+            # instant has fired (it may ready an even earlier fiber)
+            best_i, best_t = 0, float("inf")
+            for i, (f, _) in enumerate(self.ready):
+                t = max(tl.now, self.cores[f.core].free)
+                if t < best_t:
+                    best_i, best_t = i, t
+            nxt = tl.peek()
+            if nxt is not None and nxt < best_t:
+                tl.run_next()
+                self._drain_all()
+                return
+            fiber, send_val = self.ready[best_i]
+            del self.ready[best_i]
+            if best_t > tl.now:
+                tl.run_until(best_t)      # no earlier events: just advance
+            self._resume(fiber, send_val)
+            i = fiber.ring_idx
+            if self._ring_queued[i] and self.policy.should_flush(
+                    queued=self._ring_queued[i], inflight=self.inflight,
+                    ready=len(self.ready)):
+                self._flush_ring(i)
+            self._drain_all()
+            return
+        # nothing runnable: flush every ring, then advance the world
+        self._flush_all()
+        self._drain_all()
+        if self.ready:
+            return
+        if self.inflight or self.streams:
+            if not tl.run_next():
+                raise RuntimeError(
+                    "deadlock: fibers waiting with an empty timeline")
+            self._drain_all()
+
+    # ------------------------------------------------------------------
+
     def _resume(self, fiber: Fiber, send_val) -> None:
         if self.switch_cost_s:
-            self.ring.tl.run_until(self.ring.tl.now + self.switch_cost_s)
+            if self.mc:
+                self.cores[fiber.core].charge(self.ring.tl.now,
+                                              self.switch_cost_s)
+            else:
+                self.ring.tl.run_until(self.ring.tl.now +
+                                       self.switch_cost_s)
         try:
             req = fiber.gen.send(send_val)
         except StopIteration as stop:
             fiber.done = True
             fiber.value = stop.value
             self.completed_fibers += 1
+            self._reap_abandoned_streams(fiber)
             return
         if req is None:                   # cooperative re-queue
             self.ready.append((fiber, None))
+            return
+        if isinstance(req, StreamRead):
+            self._stream_read(fiber, req.ud)
+            return
+        if isinstance(req, StreamClose):
+            self._stream_close(fiber, req.ud)
+            return
+        ring = self.rings[fiber.ring_idx]
+        if isinstance(req, IoRequest) and req.multishot:
+            ud = self._enqueue(ring, fiber.ring_idx, req)
+            self.streams[ud] = _Stream(fiber)
+            self.inflight += 1
+            self.ready.append((fiber, ud))   # hand the stream id back
             return
         reqs = req if isinstance(req, list) else [req]
         fiber._group = isinstance(req, list)
@@ -145,22 +276,84 @@ class FiberScheduler:
         for r in reqs:
             if not isinstance(r, IoRequest):
                 raise TypeError(f"fiber yielded {type(r)}")
-            sqe = self.ring.get_sqe()
-            while sqe is None:            # SQ full: flush and retry
-                self._flush()
-                sqe = self.ring.get_sqe()
-            ud = next(self._uds)
-            r.prep(sqe, ud)
-            sqe.user_data = ud
+            ud = self._enqueue(ring, fiber.ring_idx, r)
             self.waiting[ud] = fiber
             self.inflight += 1
+
+    def _enqueue(self, ring: IoUring, ring_idx: int, r: IoRequest) -> int:
+        sqe = ring.get_sqe()
+        while sqe is None:            # SQ full: flush and retry
+            self._flush_ring(ring_idx)
+            sqe = ring.get_sqe()
+        ud = next(self._uds)
+        r.prep(sqe, ud)
+        sqe.user_data = ud
+        if self.per_op_submit:        # epoll baseline: 1 enter per I/O
+            ring.submit()
+        else:
             self._queued += 1
+            self._ring_queued[ring_idx] += 1
+        return ud
+
+    # ------------------------------------------------------- streams
+
+    def _stream_read(self, fiber: Fiber, ud: int) -> None:
+        st = self.streams.get(ud)
+        if st is None:
+            raise RuntimeError(f"StreamRead on unknown/closed stream {ud}")
+        if st.q:
+            cqe = st.q.popleft()
+            if st.done and not st.q:
+                del self.streams[ud]
+            self.ready.append((fiber, cqe))
+            return
+        if st.done:                   # terminal CQE already consumed
+            raise RuntimeError(f"StreamRead past end of stream {ud}")
+        st.waiter = fiber
+
+    def _drop_stream(self, ud: int, st: _Stream) -> None:
+        """Close one stream's accounting: cancel a still-armed multishot
+        recv, or — when cancel() finds nothing to disarm (a SEND_ZC
+        notification stream: its terminal ZC_NOTIF CQE is already in
+        flight) — leave a tombstone so _dispatch settles the inflight
+        count when that CQE lands."""
+        if st.done:
+            return
+        if self.rings[st.owner.ring_idx].cancel(ud):
+            self.inflight -= 1
+        else:
+            self._orphans.add(ud)
+        st.done = True
+
+    def _stream_close(self, fiber: Fiber, ud: int) -> None:
+        st = self.streams.pop(ud, None)
+        if st is not None:
+            self._drop_stream(ud, st)
+        self.ready.append((fiber, None))
+
+    def _reap_abandoned_streams(self, fiber: Fiber) -> None:
+        """A finished fiber's streams can never be read again: cancel
+        still-armed ops so ``run()`` can terminate."""
+        for ud, st in list(self.streams.items()):
+            if st.owner is fiber:
+                self._drop_stream(ud, st)
+                del self.streams[ud]
+
+    # ------------------------------------------------------- flushing
 
     def _flush(self) -> None:
-        if self._queued:
-            self.ring.submit()
-            self._queued = 0
+        self._flush_ring(0)           # single-core mode lives on ring 0
         self._drain_some()
+
+    def _flush_ring(self, i: int) -> None:
+        if self._ring_queued[i]:
+            self.rings[i].submit()
+            self._queued -= self._ring_queued[i]
+            self._ring_queued[i] = 0
+
+    def _flush_all(self) -> None:
+        for i in range(len(self.rings)):
+            self._flush_ring(i)
 
     def _drain_some(self) -> None:
         while True:
@@ -169,11 +362,51 @@ class FiberScheduler:
                 return
             self._dispatch(cqe)
 
+    def _drain_all(self) -> None:
+        for ring in self.rings:
+            # DeferTaskrun reaps completions inside enter/wait; the
+            # scheduler's drain IS the wait side in multi-core mode
+            ring._run_task_work()
+            while True:
+                cqe = ring.peek_cqe()
+                if cqe is None:
+                    break
+                self._dispatch(cqe)
+
+    # ------------------------------------------------------- dispatch
+
     def _dispatch(self, cqe: CQE) -> None:
-        fiber = self.waiting.pop(cqe.user_data, None)
-        self.inflight -= 1
-        if fiber is None:
+        ud = cqe.user_data
+        st = self.streams.get(ud)
+        if st is not None:
+            if not (cqe.flags & CqeFlags.MORE):
+                st.done = True
+                self.inflight -= 1
+            if st.waiter is not None:
+                f, st.waiter = st.waiter, None
+                if st.done and not st.q:
+                    del self.streams[ud]
+                self.ready.append((f, cqe))
+            else:
+                st.q.append(cqe)
             return
+        fiber = self.waiting.get(ud)
+        if fiber is None:
+            if ud in self._orphans and not (cqe.flags & CqeFlags.MORE):
+                # terminal CQE of a closed/abandoned stream (e.g. an
+                # unreaped ZC_NOTIF): settle the inflight count
+                self._orphans.discard(ud)
+                self.inflight -= 1
+            return                        # canceled / already closed
+        if cqe.flags & CqeFlags.MORE:
+            # e.g. SEND_ZC: first CQE completes the request but the
+            # buffer-release ZC_NOTIF is still outstanding — auto-open a
+            # stream so the fiber can reap it with StreamRead(ud)
+            del self.waiting[ud]
+            self.streams[ud] = _Stream(fiber)
+        else:
+            del self.waiting[ud]
+            self.inflight -= 1
         fiber._pending -= 1
         fiber._results.append(cqe)
         if fiber._pending == 0:

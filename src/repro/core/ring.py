@@ -24,7 +24,7 @@ from repro.core.backends import FileBackend, SimNVMe, SimSocket
 from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.sqe import (CQE, EAGAIN, ECANCELED, EINVAL, ETIME, SQE,
                             CqeFlags, Op, RingStats, SetupFlags, SqeFlags)
-from repro.core.timeline import Timeline
+from repro.core.timeline import CoreClock, Timeline
 
 
 class RegisteredBuffers:
@@ -40,21 +40,52 @@ class RegisteredBuffers:
         return len(self.buffers)
 
 
+class BufferRing:
+    """Provided buffer ring (``io_uring_register_buf_ring``, paper §4.2).
+
+    The application hands the kernel a ring of equally-sized buffers;
+    each recv completion consumes one slot (``CQE.buf_id``) and the app
+    recycles it after processing.  An empty ring terminates the recv —
+    multishot included — with ``EAGAIN`` and no ``MORE`` flag, so the
+    consumer must recycle buffers and re-arm."""
+
+    def __init__(self, bgid: int, buffers: List[bytearray]):
+        self.bgid = bgid
+        self.buffers = [memoryview(b) for b in buffers]
+        self.free: deque = deque(range(len(buffers)))
+
+    def get(self) -> Optional[int]:
+        return self.free.popleft() if self.free else None
+
+    def recycle(self, bid: int) -> None:
+        self.free.append(bid)
+
+    def available(self) -> int:
+        return len(self.free)
+
+
 class IoUring:
     def __init__(self, timeline: Timeline, *, sq_depth: int = 256,
                  cq_depth: int = 0, setup: SetupFlags = SetupFlags.NONE,
-                 costs: CostModel = DEFAULT_COSTS, n_workers: int = 32):
+                 costs: CostModel = DEFAULT_COSTS, n_workers: int = 32,
+                 core: Optional[CoreClock] = None):
         self.tl = timeline
         self.sq_depth = sq_depth
         self.cq_depth = cq_depth or sq_depth * 2
         self.setup = setup
         self.costs = costs
+        # multi-core mode (shuffle: ring-per-worker): CPU charges go to
+        # this core's busy-until clock instead of advancing the global
+        # timeline, so N worker cores burn cycles concurrently
+        self.core = core
         self.sq: deque = deque()
         self.cq: deque = deque()
         self._pending_task_work: deque = deque()   # completed, not yet CQE
         self._devices: Dict[int, object] = {}
         self._fixed_files: Dict[int, int] = {}
         self.bufs: Optional[RegisteredBuffers] = None
+        self._buf_rings: Dict[int, BufferRing] = {}
+        self._ms_waiters: Dict[int, tuple] = {}    # ud -> (sock, waiter fn)
         self.stats = RingStats()
         self._workers_free = [0.0] * n_workers
         self.active_workers = 0
@@ -71,6 +102,28 @@ class IoUring:
 
     def register_buffers(self, buffers: List[bytearray]) -> None:
         self.bufs = RegisteredBuffers(buffers)
+
+    def register_buf_ring(self, bgid: int, n_bufs: int,
+                          buf_size: int) -> BufferRing:
+        """Provided buffer ring for BUFFER_SELECT recvs (paper §4.2)."""
+        br = BufferRing(bgid, [bytearray(buf_size) for _ in range(n_bufs)])
+        self._buf_rings[bgid] = br
+        return br
+
+    def buf_ring_recycle(self, bgid: int, bid: int) -> None:
+        self._buf_rings[bgid].recycle(bid)
+
+    def cancel(self, user_data: int) -> bool:
+        """ASYNC_CANCEL-lite: disarm a still-armed multishot recv.
+        Returns True if it was armed (no CQE is posted — the caller owns
+        the accounting, see FiberScheduler StreamClose)."""
+        ent = self._ms_waiters.pop(user_data, None)
+        if ent is None:
+            return False
+        sock, fn = ent
+        if fn in sock.rx_waiters:
+            sock.rx_waiters.remove(fn)
+        return True
 
     def register_files(self, fds: List[int]) -> None:
         for i, fd in enumerate(fds):
@@ -287,49 +340,113 @@ class IoUring:
 
     def _issue_socket(self, sqe: SQE, sock: SimSocket, then,
                       on_sqpoll: bool) -> None:
+        if sqe.op in (Op.SEND, Op.SEND_ZC):
+            self._issue_send(sqe, sock, then, on_sqpoll)
+        else:
+            self._issue_recv(sqe, sock, then, on_sqpoll)
+
+    def _issue_send(self, sqe: SQE, sock: SimSocket, then,
+                    on_sqpoll: bool) -> None:
         c = self.costs
-        zc = sqe.op in (Op.SEND_ZC, Op.RECV_ZC)
+        zc = sqe.op == Op.SEND_ZC
         fixed = sqe.buf_index >= 0
         cost = c.sock_submit
-        if sqe.op in (Op.SEND, Op.SEND_ZC):
-            if zc or fixed:
-                cost += c.zc_setup
-            else:
-                cost += int(c.copy_per_byte * sqe.length)
-                self.stats.bounce_bytes_copied += sqe.length
-            self._charge(cost, on_sqpoll)
-            delay = sock.service_send(sqe.length)
-            self.tl.at(self.tl.now + delay,
-                       lambda: self._async_complete(sqe, sqe.length, then,
-                                                    zc_notif=zc))
-            return
-        # RECV / RECV_ZC / MULTISHOT
+        if zc or fixed:
+            cost += c.zc_setup
+        else:
+            cost += c.copy_cycles(sqe.length)
+            self.stats.bounce_bytes_copied += sqe.length
+        self._charge(cost, on_sqpoll)
+        t_cpu = self._cpu_now()
+        tx_done, _ = sock.service_send(sqe.length, t_cpu)
+        if zc:
+            # kernel >= 6.0 semantics: TWO CQEs per SEND_ZC.  The first
+            # (res = length, MORE set) says the request completed; the
+            # ZC_NOTIF CQE fires only once the NIC has drained the
+            # pinned user buffer — until then the app must not reuse it.
+            self.tl.at(t_cpu, lambda: self._async_complete(
+                sqe, sqe.length, None,
+                flags=CqeFlags.POLLED | CqeFlags.MORE))
+            notif = SQE(user_data=sqe.user_data)
+            notif._t_submit = getattr(sqe, "_t_submit", t_cpu)
+            self.tl.at(max(t_cpu, tx_done), lambda: self._async_complete(
+                notif, 0, then,
+                flags=CqeFlags.POLLED | CqeFlags.ZC_NOTIF))
+        else:
+            # copied send: the kernel owns a private copy once the CPU
+            # work is done — completion does not wait for the wire
+            self.tl.at(t_cpu,
+                       lambda: self._async_complete(sqe, sqe.length, then))
+
+    def _issue_recv(self, sqe: SQE, sock: SimSocket, then,
+                    on_sqpoll: bool) -> None:
+        c = self.costs
+        zc = sqe.op == Op.RECV_ZC
+        fixed = sqe.buf_index >= 0
+        bring = None
+        if sqe.flags & SqeFlags.BUFFER_SELECT:
+            bring = self._buf_rings.get(sqe.buf_group)
+            if bring is None:
+                self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
+                return
+        cost = c.sock_submit
         if not (sqe.flags & SqeFlags.POLL_FIRST):
             cost += c.sock_speculative       # speculative inline attempt
         self._charge(cost, on_sqpoll)
         multishot = bool(sqe.flags & SqeFlags.MULTISHOT)
-        got = None if multishot else sock.try_recv()
-        if got is not None and not (sqe.flags & SqeFlags.POLL_FIRST):
+        # POLL_FIRST skips the speculative inline attempt entirely —
+        # popping the queue here would discard the message (the waiter
+        # path below re-reads it via try_recv)
+        got = None if (multishot or sqe.flags & SqeFlags.POLL_FIRST) \
+            else sock.try_recv()
+        if got is not None:
+            bid = -1
+            if bring is not None:
+                bid = bring.get()
+                if bid is None:
+                    sock.rx_queue.insert(0, got)
+                    self.stats.buf_ring_exhausted += 1
+                    self._complete(sqe, EAGAIN, CqeFlags.INLINE, then)
+                    return
             if not (zc or fixed):
-                self._charge(int(c.copy_per_byte * got), on_sqpoll)
+                self._charge(c.copy_cycles(got), on_sqpoll)
                 self.stats.bounce_bytes_copied += got
-            self._complete(sqe, got, CqeFlags.INLINE, then)
+            self._complete(sqe, got, CqeFlags.INLINE, then, buf_id=bid)
             return
 
         def on_ready():
             g = sock.try_recv()
             if g is None:
                 return
-            sock.rx_waiters.remove(on_ready)
+            bid = -1
+            if bring is not None:
+                bid = bring.get()
+                if bid is None:
+                    # buffer ring exhausted: leave the message queued and
+                    # terminate the recv (multishot included) — EAGAIN,
+                    # no MORE flag: the app recycles and re-arms
+                    sock.rx_queue.insert(0, g)
+                    sock.rx_waiters.remove(on_ready)
+                    self._ms_waiters.pop(sqe.user_data, None)
+                    self.stats.buf_ring_exhausted += 1
+                    self._async_complete(sqe, EAGAIN, then,
+                                         flags=CqeFlags.POLLED)
+                    return
             if not (zc or fixed):                  # kernel->user copy
-                self._charge(int(c.copy_per_byte * g), False)
+                self._charge(c.copy_cycles(g), False)
                 self.stats.bounce_bytes_copied += g
             flags = CqeFlags.POLLED
-            if sqe.flags & SqeFlags.MULTISHOT:
-                flags |= CqeFlags.MORE
-                sock.rx_waiters.append(on_ready)   # re-arm (one SQE)
-            self._async_complete(sqe, g, then, flags=flags)
+            if multishot:
+                flags |= CqeFlags.MORE             # armed: one SQE, more CQEs
+                self.stats.multishot_cqes += 1     # recv-path CQEs only —
+                                                   # SEND_ZC's MORE-flagged
+                                                   # completion doesn't count
+            else:
+                sock.rx_waiters.remove(on_ready)
+            self._async_complete(sqe, g, then, flags=flags, buf_id=bid)
         sock.rx_waiters.append(on_ready)
+        if multishot:
+            self._ms_waiters[sqe.user_data] = (sock, on_ready)
         # drain anything already queued (multishot: one CQE per message)
         while sock.rx_queue and on_ready in sock.rx_waiters:
             before = len(sock.rx_queue)
@@ -373,12 +490,13 @@ class IoUring:
 
     def _async_complete(self, sqe: SQE, res: int, then,
                         flags: CqeFlags = CqeFlags.POLLED,
-                        zc_notif: bool = False) -> None:
+                        buf_id: int = -1) -> None:
         c = self.costs
         iopoll = bool(self.setup & SetupFlags.IOPOLL)
-        cqe = CQE(user_data=sqe.user_data, res=res,
-                  flags=flags | (CqeFlags.ZC_NOTIF if zc_notif
-                                 else CqeFlags.NONE),
+        if flags & CqeFlags.ZC_NOTIF:
+            self.stats.zc_notifs += 1
+        cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
+                  buf_id=buf_id,
                   t_submit=getattr(sqe, "_t_submit", self.tl.now),
                   t_complete=self.tl.now)
         if iopoll:
@@ -414,8 +532,10 @@ class IoUring:
                              (self.setup & SetupFlags.IOPOLL) else 0, False)
             self.cq.append(cqe)
 
-    def _complete(self, sqe: SQE, res: int, flags: CqeFlags, then) -> None:
+    def _complete(self, sqe: SQE, res: int, flags: CqeFlags, then,
+                  buf_id: int = -1) -> None:
         cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
+                  buf_id=buf_id,
                   t_submit=getattr(sqe, "_t_submit", self.tl.now),
                   t_complete=self.tl.now)
         self.cq.append(cqe)
@@ -437,12 +557,25 @@ class IoUring:
             return self.bufs[sqe.buf_index]
         return sqe.buf
 
+    def _cpu_now(self) -> float:
+        """The submitting CPU's current time: the core horizon in
+        multi-core mode, the global clock otherwise (where charges have
+        already advanced it)."""
+        if self.core is not None:
+            return max(self.tl.now, self.core.free)
+        return self.tl.now
+
     def _charge(self, cycles: float, on_sqpoll: bool) -> None:
         dt = self.costs.s(cycles)
         if on_sqpoll:
             self.stats.cpu_seconds_sqpoll += dt
             self._sqpoll_busy_until = max(self._sqpoll_busy_until,
                                           self.tl.now) + dt
+        elif self.core is not None:
+            # multi-core: occupy this ring's core; the global clock only
+            # advances through the event heap (see CoreClock)
+            self.stats.cpu_seconds_app += dt
+            self.core.charge(self.tl.now, dt)
         else:
             self.stats.cpu_seconds_app += dt
             self.tl.run_until(self.tl.now + dt)
@@ -505,10 +638,13 @@ def prep_send(sqe, fd, length, user_data=0, flags=SqeFlags.NONE,
 
 
 def prep_recv(sqe, fd, length=0, user_data=0, flags=SqeFlags.NONE,
-              zero_copy=False, buf_index=-1):
+              zero_copy=False, buf_index=-1, buf_group=-1):
     s = _prep(sqe, Op.RECV_ZC if zero_copy else Op.RECV, fd, None, 0,
               length, user_data, flags)
     s.buf_index = buf_index
+    if buf_group >= 0:
+        s.buf_group = buf_group
+        s.flags |= SqeFlags.BUFFER_SELECT
     return s
 
 

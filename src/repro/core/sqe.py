@@ -37,6 +37,8 @@ class SqeFlags(enum.IntFlag):
     MULTISHOT = enum.auto()     # one SQE, many CQEs (recv)
     POLL_FIRST = enum.auto()    # skip the speculative inline attempt
     FIXED_FILE = enum.auto()    # fd is an index into the registered-file table
+    BUFFER_SELECT = enum.auto() # kernel picks a buffer from sqe.buf_group's
+                                # provided buffer ring (paper §4.2)
 
 
 class SetupFlags(enum.IntFlag):
@@ -73,6 +75,7 @@ class SQE:
     length: int = 0
     buf: Any = None            # memoryview / np.ndarray / bytes
     buf_index: int = -1        # registered-buffer slot for *_FIXED ops
+    buf_group: int = -1        # provided-buffer-ring group (BUFFER_SELECT)
     user_data: int = 0
     flags: SqeFlags = SqeFlags.NONE
     timeout: Optional[float] = None   # for TIMEOUT / LINK_TIMEOUT (seconds)
@@ -87,6 +90,7 @@ class CQE:
     user_data: int = 0
     res: int = 0
     flags: CqeFlags = CqeFlags.NONE
+    buf_id: int = -1           # provided-buffer slot this CQE consumed
     # not in the ABI, but handy for analysis/benchmarks:
     t_complete: float = 0.0
     t_submit: float = 0.0
@@ -111,6 +115,9 @@ class RingStats:
     bounce_bytes_copied: int = 0   # kernel<->user copies avoided by RegBufs/ZC
     cpu_seconds_app: float = 0.0   # CPU charged to the application core
     cpu_seconds_sqpoll: float = 0.0
+    multishot_cqes: int = 0        # CQEs carrying CqeFlags.MORE
+    zc_notifs: int = 0             # SEND_ZC buffer-release notifications
+    buf_ring_exhausted: int = 0    # recvs terminated for lack of a buffer
 
     def batch_efficiency(self) -> float:
         return self.sqes_submitted / max(1, self.enters)

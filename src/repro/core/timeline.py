@@ -12,7 +12,30 @@ import heapq
 import itertools
 from typing import Callable, Optional
 
+from dataclasses import dataclass
+
 from repro.core.clock import RealClock, VirtualClock
+
+
+@dataclass
+class CoreClock:
+    """Busy-until clock of one simulated CPU core.
+
+    The global ``Timeline`` carries *event* time (device completions,
+    packet arrivals); a ``CoreClock`` carries the per-core CPU horizon so
+    N cores can burn cycles concurrently without serializing on the
+    global clock.  A ring constructed with ``core=`` charges CPU here
+    instead of advancing the timeline; the multi-core ``FiberScheduler``
+    resumes a fiber no earlier than its core's horizon."""
+
+    free: float = 0.0
+
+    def charge(self, now: float, seconds: float) -> float:
+        """Occupy the core for ``seconds`` starting no earlier than
+        ``now``; returns the completion time."""
+        t0 = max(now, self.free)
+        self.free = t0 + seconds
+        return self.free
 
 
 class Timeline:
@@ -53,3 +76,7 @@ class Timeline:
 
     def pending(self) -> int:
         return len(self._heap)
+
+    def peek(self) -> Optional[float]:
+        """Timestamp of the next pending event, or None."""
+        return self._heap[0][0] if self._heap else None

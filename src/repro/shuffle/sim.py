@@ -1,11 +1,23 @@
-"""Distributed data-shuffle engine (paper §4): morsel-driven workers,
-ring-per-thread, 1 MiB transfer chunks, zero-copy send/recv options.
+"""Analytical shuffle oracle (paper §4): closed-form timing over the
+SAME data movement as the ring-driven engine.
 
-Unlike the storage engine (one virtual core), the shuffle models a
-CLUSTER: n_nodes × n_workers cores, each with its own busy-until clock,
-exchanging over the paced SimNetwork links. The per-op CPU charges come
-from the same CostModel as the ring; ``iface='epoll'`` charges one
-syscall per I/O instead of io_uring's batched enters (Fig. 13's baseline).
+This module used to be the only shuffle implementation; it is now the
+*cross-validation oracle* for ``shuffle.engine``.  Both iterate the
+identical morsel/chunk plan (``shuffle.plan``) and pace transfers
+through the identical per-flow fair-share link model
+(``core.backends.SimNetwork.flow_schedule``); the oracle charges each
+step's CPU in closed form (one arithmetic expression per chunk) where
+the engine earns it SQE by SQE through ``core.ring``.  Agreement within
+a few percent is asserted in tests/test_shuffle.py; disagreement beyond
+that flags a timing-model regression in either side.
+
+Syscall accounting is structural, not assumed: with one staging buffer
+per destination, all ``n_nodes - 1`` buffers fill on the same morsel,
+so the engine submits their sends as ONE ``io_uring_enter`` — the
+oracle charges ``syscall / sends_per_enter`` with
+``sends_per_enter = n_nodes - 1`` for io_uring (and 1 for the epoll
+baseline, which also pays a syscall per recv).  Multishot recv re-arms
+in kernel space: zero recv syscalls for io_uring.
 
 Per-tuple probe-table inserts are charged a random-memory-access stall
 (the paper's "small tuples limit throughput" effect, Fig. 11), and every
@@ -17,12 +29,19 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
 
+from repro.core.backends import NICSpec, SimNetwork
 from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.shuffle.plan import morsel_plan, receiver_worker
 
 KiB, MiB = 1024, 1024 * 1024
+
+
+def _chain(head, rest):
+    """Push one lookahead item back onto an iterator."""
+    return itertools.chain([head], rest)
 
 
 @dataclass
@@ -45,12 +64,17 @@ class ShuffleConfig:
     dram_stall_s: float = 25e-9
     scan_cost_per_byte: float = 0.004e-9
     partition_cost_per_tuple: float = 3e-9
-    memcpy_per_byte: float = 0.025e-9
     tuned_network: bool = True       # Fig. 14: qdisc/socket-buffer tuning
+    # receive-side provided-buffer ring (engine only; the oracle assumes
+    # it never runs dry)
+    rx_buffers: int = 16
+
+    def nic_spec(self) -> NICSpec:
+        return NICSpec(bw=self.link_bw)
 
 
 class ShuffleSim:
-    """Event-driven cluster simulation. Events: (time, seq, fn)."""
+    """Event-driven closed-form oracle. Events: (time, seq, fn)."""
 
     def __init__(self, cfg: ShuffleConfig, costs: CostModel = DEFAULT_COSTS):
         self.cfg = cfg
@@ -61,16 +85,16 @@ class ShuffleSim:
         n = cfg.n_nodes
         # per-(node, worker) core clock
         self.core_free = [[0.0] * cfg.n_workers for _ in range(n)]
-        # per-direction link pacing; untuned networks suffer flow imbalance
-        self.tx_free = [0.0] * n
-        # fair-share rx: each (dst, src) flow gets bw/(n-1) (TCP fairness;
-        # the paper's Fig. 14 tuning is what MAKES this fair)
-        self.rx_free = {(d, s_): 0.0 for d in range(n) for s_ in range(n)}
+        # shared link model: tx lane per node, fair-share rx lane per flow
+        # (pure clock arithmetic — no timeline needed)
+        self.net = SimNetwork(None, n, cfg.nic_spec(),
+                              tuned=cfg.tuned_network)
         self.mem_free = [0.0] * n     # node memory-bandwidth meter
+        self._zc_pending: Dict = {}   # (src, worker) -> unreaped tx_done
         self.sent = [0] * n
         self.received = [0] * n
         self.mem_bytes = [0] * n      # memory traffic (copies + probe)
-        self.syscalls = [0] * n
+        self.syscalls = [0.0] * n
         self.cpu_busy = [0.0] * n
         self.t_end = 0.0
 
@@ -102,6 +126,16 @@ class ShuffleSim:
         self.cpu_busy[node] += seconds
         return t1
 
+    def _cqe_s(self) -> float:
+        """Completion handling per CQE (mirrors ring._run_task_work:
+        task-work placement + IRQ; the epoll baseline also eats the
+        IPI preemption of default task-running mode)."""
+        c = self.costs
+        cyc = c.task_work + c.complete_irq
+        if self.cfg.iface == "epoll":
+            cyc += c.preempt_ipi
+        return c.s(cyc)
+
     def _send_chunk(self, src: int, dst: int, nbytes: int, t: float,
                     worker: int) -> float:
         """CPU (submit + optional copy) then link pacing; schedules the
@@ -112,90 +146,151 @@ class ShuffleSim:
             cpu += c.s(c.syscall)              # one syscall per send
             self.syscalls[src] += 1
         else:
-            cpu += c.s(c.syscall) / 16.0       # batched enter, amortized
-            self.syscalls[src] += 1 / 16.0
-        membytes = nbytes                      # NIC DMA read
+            # one enter covers the (n_nodes - 1) sends whose staging
+            # buffers fill on the same morsel — see shuffle.plan
+            sends_per_enter = max(1, cfg.n_nodes - 1)
+            cpu += c.s(c.syscall) / sends_per_enter
+            self.syscalls[src] += 1 / sends_per_enter
         if cfg.zc_send:
             cpu += c.s(c.zc_setup)
+            cpu += 2 * self._cqe_s()           # completion + ZC_NOTIF CQEs
         else:
-            cpu += nbytes * cfg.memcpy_per_byte
-            membytes += 2 * nbytes             # read + write of the bounce
-        self.mem_bytes[src] += membytes
-        t_cpu = self._charge(src, worker, t, cpu, mem_bytes=membytes)
+            cpu += c.s(c.copy_cycles(nbytes))
+            cpu += self._cqe_s()
+        # NB: the staging memory traffic was charged by the caller for
+        # the WHOLE batch before any copy ran (engine charge order)
+        t_cpu = self._charge(src, worker, t, cpu)
 
-        # untuned stacks lose ~25% effective bandwidth to flow imbalance
-        bw = cfg.link_bw * (1.0 if cfg.tuned_network else 0.75)
-        # decoupled full-duplex lanes: tx paces the sender NIC; the rx side
-        # is a fair-share lane per flow at bw/(n-1)
-        tx_start = max(t_cpu, self.tx_free[src])
-        self.tx_free[src] = tx_start + nbytes / bw
-        flow_bw = bw / (self.cfg.n_nodes - 1)
-        rx_start = max(self.rx_free[(dst, src)], tx_start)
-        self.rx_free[(dst, src)] = rx_start + nbytes / flow_bw
-        arrive = self.rx_free[(dst, src)]
+        # shared pacing model: tx lane at link rate, fair-share rx lane
+        # per (dst, src) flow; untuned stacks lose ~25% to flow imbalance
+        # (worker steps fire in global time order, so the shared lanes
+        # are paced in order too)
         self.sent[src] += nbytes
-        self._at(arrive, lambda: self._on_recv(dst, nbytes, arrive))
+        tx_done, arrive = self.net.flow_schedule(src, dst, nbytes, t_cpu)
+        self._at(arrive, lambda: self._on_recv(dst, src, nbytes, arrive))
+        if cfg.zc_send:
+            # ZC_NOTIF backpressure: the staging buffer stays pinned
+            # until the NIC drains it; with a double-buffer per
+            # destination the worker stalls once 2×(n-1) notifs are
+            # outstanding (mirrors ShuffleEngine._sender's reaping)
+            q = self._zc_pending.setdefault((src, worker), [])
+            q.append(tx_done)
+            if len(q) > 2 * (cfg.n_nodes - 1):
+                t_cpu = max(t_cpu, q.pop(0))
         return t_cpu
 
-    def _on_recv(self, node: int, nbytes: int, t: float) -> None:
+    def _on_recv(self, node: int, src: int, nbytes: int, t: float) -> None:
         cfg, c = self.cfg, self.costs
         self.received[node] += nbytes
         membytes = nbytes                      # NIC DMA write
-        w = (self.received[node] // cfg.chunk_bytes) % cfg.n_workers
-        cpu = c.s(c.sock_submit)               # recv completion handling
+        w = receiver_worker(cfg, node, src)
+        cpu = self._cqe_s()                    # recv completion handling
         if cfg.iface == "epoll":
-            cpu += c.s(c.syscall)
+            # single-shot recv: re-arm syscall + submit path per chunk
+            cpu += c.s(c.syscall + c.sock_submit + c.sock_speculative)
             self.syscalls[node] += 1
-        else:
-            cpu += c.s(c.syscall) / 16.0
+        # else: multishot recv stays armed — zero syscalls, zero submits
         if not cfg.zc_recv:
-            cpu += nbytes * cfg.memcpy_per_byte
+            cpu += c.s(c.copy_cycles(nbytes))
             membytes += 2 * nbytes
+        probe = 0.0
         if cfg.build_probe_table:
             n_tuples = nbytes // cfg.tuple_size
-            cpu += n_tuples * (cfg.dram_stall_s +
-                               cfg.partition_cost_per_tuple)
+            probe = n_tuples * (cfg.dram_stall_s +
+                                cfg.partition_cost_per_tuple)
             membytes += n_tuples * 64          # cacheline per insert
         self.mem_bytes[node] += membytes
-        t1 = self._charge(node, w, t, cpu, mem_bytes=membytes)
-        self.t_end = max(self.t_end, t1)
+        # same charge order as the engine: the ring burns the kernel-side
+        # copy at arrival; the probe work (which carries the memory
+        # traffic) is booked by a second event once the copy completes —
+        # booking it now would reserve the node memory meter at a
+        # far-future core time and convoy every later charge behind it
+        # (the meter is one FIFO lane; see ShuffleEngine._consume)
+        t1 = self._charge(node, w, t, cpu)
+
+        def probe_ev(t_ready):
+            # later arrivals' copies may have queued on the core since
+            # this was scheduled: re-defer until it is actually free so
+            # the meter booking lands at heap-now (like a fiber resume)
+            avail = max(t_ready, self.core_free[node][w])
+            if avail > t_ready:
+                self._at(avail, lambda: probe_ev(avail))
+                return
+            t2 = self._charge(node, w, t_ready, probe,
+                              mem_bytes=membytes)
+            self.t_end = max(self.t_end, t2)
+        self._at(t1, lambda: probe_ev(t1))
 
     # ------------------------------------------------------------- run
 
     def run(self) -> Dict:
         cfg = self.cfg
         n = cfg.n_nodes
-        morsel = cfg.chunk_bytes               # scan granularity
-        per_worker = cfg.total_bytes_per_node // cfg.n_workers
 
-        for src in range(n):
-            for w in range(cfg.n_workers):
-                t = 0.0
-                remaining = per_worker
-                others = [d for d in range(n) if d != src]
-                rot = (w + src) % len(others)   # stagger flows across dsts
-                dst_cycle = itertools.cycle(others[rot:] + others[:rot])
-                while remaining > 0:
-                    nb = min(morsel, remaining)
-                    remaining -= nb
+        # Each worker advances one morsel (plus the chunk flushes it
+        # triggers) per EVENT, re-scheduled at its own running clock, so
+        # every core/memory-meter/link booking across all workers and
+        # all arrivals happens in global time order.  Booking a worker's
+        # whole plan up front would reserve the shared node memory meter
+        # far into the future and push every rx charge behind it — a
+        # convoy the engine's scheduler never exhibits.
+        plans = {(src, w): morsel_plan(cfg, src, w)
+                 for src in range(n) for w in range(cfg.n_workers)}
+        clocks = {key: 0.0 for key in plans}
+
+        def step(key):
+            src, w = key
+            t = clocks[key]
+            # fire when the core is actually free (rx work may have
+            # intruded since this step was scheduled) — the engine's
+            # scheduler resumes fibers the same way; without this, a
+            # deferred worker books the shared memory meter at far-future
+            # core times, convoying every later rx charge behind it
+            avail = max(t, self.core_free[src][w])
+            if avail > t:
+                clocks[key] = avail
+                self._at(avail, lambda: step(key))
+                return
+            ev = next(plans[key], None)
+            if ev is None:
+                self.t_end = max(self.t_end, t)
+                return
+            sends = []
+            while ev is not None:
+                if ev[0] == "morsel":
+                    _, nb, n_tuples, local = ev
                     # scan + partition the morsel
-                    n_tuples = nb // cfg.tuple_size
                     cpu = nb * cfg.scan_cost_per_byte + \
                         n_tuples * cfg.partition_cost_per_tuple
-                    self.mem_bytes[src] += nb              # scan read
+                    self.mem_bytes[src] += nb          # scan read
                     t = self._charge(src, w, t, cpu, mem_bytes=nb)
-                    # (n-1)/n of tuples go remote; local fraction probes
-                    local = nb // n
                     if cfg.build_probe_table and local:
                         lt = local // cfg.tuple_size
                         t = self._charge(src, w, t,
                                          lt * cfg.dram_stall_s)
                         self.mem_bytes[src] += lt * 64
-                    remote = nb - local
-                    dst = next(dst_cycle)
-                    t = self._send_chunk(src, dst, remote, t, w)
-                self.t_end = max(self.t_end, t)
+                else:
+                    sends.append((ev[1], ev[2]))
+                nxt = next(plans[key], None)
+                if nxt is not None and nxt[0] == "morsel":
+                    plans[key] = _chain(nxt, plans[key])
+                    break
+                ev = nxt
+            if sends:
+                # engine charge order: stage every chunk of the batch
+                # (one contiguous meter booking), THEN burn the per-send
+                # submit/copy CPU while the meter serves other cores
+                for dst, nbytes in sends:
+                    membytes = nbytes if cfg.zc_send else 3 * nbytes
+                    self.mem_bytes[src] += membytes
+                    t = self._charge(src, w, t, 0.0, mem_bytes=membytes)
+                for dst, nbytes in sends:
+                    t = self._send_chunk(src, dst, nbytes, t, w)
+            clocks[key] = t
+            self._at(t, lambda: step(key))
 
+        for key in plans:
+            self._at(0.0, lambda key=key: step(key))
         self._drain()
         dur = max(self.t_end, self.now, 1e-9)
         egress = [s / dur for s in self.sent]

@@ -36,7 +36,7 @@ from __future__ import annotations
 import itertools
 import struct as _struct
 from dataclasses import dataclass, field
-from typing import Generator, List, Optional, Tuple
+from typing import Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
@@ -80,6 +80,8 @@ class EngineConfig:
     durability: str = "none"
     log_capacity: int = 64 * 1024 * 1024
     ckpt_every: int = 0           # fuzzy checkpoint every N commits (0=off)
+    truncate_wal: bool = False    # reclaim log below the checkpoint's
+                                  # redo horizon (min recLSN / oldest txn)
 
     @staticmethod
     def ladder():
@@ -162,7 +164,10 @@ class Txn:
     def _intent(self, rtype: int, key: int, value: bytes) -> None:
         wal = self.engine.wal
         if not self._began:
-            wal.append(encode_record(RecordType.BEGIN, self.id))
+            lsn = wal.append(encode_record(RecordType.BEGIN, self.id))
+            # truncation bound: this txn's records (intents through
+            # APPLY_END) must survive until it is fully applied
+            self.engine._active_begin[self.id] = lsn
             self._began = True
         wal.append(encode_kv(rtype, self.id, key, value))
         self.writes.append((key, value, rtype))
@@ -219,6 +224,7 @@ class StorageEngine:
         self.committed: List[int] = []
         self.checkpoints = 0
         self._txn_ids = itertools.count(1)
+        self._active_begin: Dict[int, int] = {}   # txn -> BEGIN lsn
         if mode is not None:
             self.log_disk = SimDisk(
                 self.tl, cfg.log_capacity, spec=spec,
@@ -273,6 +279,7 @@ class StorageEngine:
         txn.done = True
         if self.wal is not None and txn._began:
             self.wal.append(encode_record(RecordType.ABORT, txn.id))
+            self._active_begin.pop(txn.id, None)
         txn.writes = []
         return
         yield                                   # (keeps this a generator)
@@ -308,6 +315,9 @@ class StorageEngine:
             wal.append(encode_apply(txn.id, tree.root, tree.next_pid,
                                     entries))
         wal.append(encode_record(RecordType.APPLY_END, txn.id))
+        # fully applied: recovery no longer needs this txn's intents
+        # (its page effects redo from APPLY records / the page LSNs)
+        self._active_begin.pop(txn.id, None)
 
     def checkpoint(self) -> Generator:
         """Flush-checkpoint: write back the currently-dirty pages (kept
@@ -327,10 +337,21 @@ class StorageEngine:
             if n == 0:
                 break
         dpt = self.pool.dirty_page_table()
-        wal.append(encode_checkpoint(self.tree.root, self.tree.next_pid,
-                                     dpt))
+        ckpt_lsn = wal.append(encode_checkpoint(self.tree.root,
+                                                self.tree.next_pid, dpt))
         yield from wal.flush_to(wal.end_lsn)
         self.checkpoints += 1
+        if self.cfg.truncate_wal:
+            # ROADMAP: the log device must stop growing unboundedly.
+            # Everything below the redo horizon is dead weight: APPLY
+            # records under the DPT's min recLSN have their effects on
+            # disk, and any txn not yet fully applied pins the log at
+            # its BEGIN record.
+            horizon = min([ckpt_lsn] + list(dpt.values()) +
+                          list(self._active_begin.values()))
+            wal.header.root = self.tree.root
+            wal.header.next_pid = self.tree.next_pid
+            wal.truncate_to(horizon)
 
     # ------------------------------------------------------ crash / run
 
@@ -388,6 +409,10 @@ class StorageEngine:
                 "log_mb": ws.bytes_appended / 1e6,
                 "wal_evict_waits": self.pool.wal_waits,
                 "checkpoints": self.checkpoints,
+                "truncations": ws.truncations,
+                "log_reclaimed_mb": ws.bytes_reclaimed / 1e6,
+                "log_live_mb": (self.wal.end_lsn -
+                                self.wal.truncated_lsn) / 1e6,
             })
         return out
 

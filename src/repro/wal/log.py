@@ -36,10 +36,11 @@ from repro.core.sqe import CqeFlags, SqeFlags
 
 BLOCK = 4096
 _REC_HDR = struct.Struct("<IIBQ")            # crc, size, type, txn
-_HDR_MAGIC = b"WALHDR1\x00"
-_LOG_HDR = struct.Struct("<8sQQQQQ")         # magic, root, next_pid,
+_HDR_MAGIC = b"WALHDR2\x00"
+_LOG_HDR = struct.Struct("<8sQQQQQQ")        # magic, root, next_pid,
                                              # page_size, value_size,
-                                             # data_capacity
+                                             # data_capacity,
+                                             # truncated_lsn
 
 
 class RecordType:
@@ -90,6 +91,8 @@ class WalStats:
     fsync_worker: int = 0             # fsync CQEs per execution path
     fsync_polled: int = 0             # (paper Fig. 3 attribution)
     fsync_inline: int = 0
+    truncations: int = 0              # checkpoint-driven log truncations
+    bytes_reclaimed: int = 0          # log space zeroed by truncation
     groups: List[int] = field(default_factory=list)
 
     def mean_group(self) -> float:
@@ -171,26 +174,35 @@ class LogHeader:
     page_size: int
     value_size: int
     data_capacity: int
+    truncated_lsn: int = 0     # log space below this LSN was reclaimed
 
 
 def encode_header(hdr: LogHeader) -> bytes:
     raw = _LOG_HDR.pack(_HDR_MAGIC, hdr.root, hdr.next_pid, hdr.page_size,
-                        hdr.value_size, hdr.data_capacity)
+                        hdr.value_size, hdr.data_capacity,
+                        hdr.truncated_lsn)
     return raw + bytes(BLOCK - len(raw))
 
 
 def read_header(log_image: bytes) -> LogHeader:
-    magic, root, next_pid, ps, vs, cap = _LOG_HDR.unpack_from(log_image, 0)
+    magic, root, next_pid, ps, vs, cap, trunc = \
+        _LOG_HDR.unpack_from(log_image, 0)
     if magic != _HDR_MAGIC:
         raise ValueError("not a WAL image (bad magic)")
-    return LogHeader(root, next_pid, ps, vs, cap)
+    return LogHeader(root, next_pid, ps, vs, cap, trunc)
 
 
 def scan_log(log_image: bytes) -> List[LogRecord]:
     """Decode every complete, CRC-valid record; stop at the first torn
-    or zeroed frame (the crash point)."""
+    or zeroed frame (the crash point).  Starts at the header's
+    ``truncated_lsn`` — reclaimed space below it is zeroed and must not
+    be mistaken for the crash point."""
     out: List[LogRecord] = []
     off = BLOCK
+    try:
+        off = max(off, read_header(log_image).truncated_lsn)
+    except (ValueError, struct.error):
+        pass                   # headerless/corrupt image: raw scan
     n = len(log_image)
     while off + _REC_HDR.size <= n:
         crc, size, rtype, txn = _REC_HDR.unpack_from(log_image, off)
@@ -240,13 +252,14 @@ class WriteAheadLog:
         self.staging = [bytearray(BLOCK * self.STAGING_BLOCKS)
                         for _ in range(self.N_STAGING)]
         self._next_slot = 0
-        hdr = header or LogHeader(0, 0, BLOCK, 0, 0)
+        self.header = header or LogHeader(0, 0, BLOCK, 0, 0)
         # bootstrap: header block goes straight into the device image,
         # exactly like bulk_load seeds the data disk
-        self.buf = bytearray(encode_header(hdr))
+        self.buf = bytearray(encode_header(self.header))
         disk.image[:BLOCK] = self.buf
         self.durable_lsn = BLOCK
         self.flushed_lsn = BLOCK
+        self.truncated_lsn = BLOCK
         self._flushing = False
         self.stats = WalStats()
 
@@ -382,3 +395,35 @@ class WriteAheadLog:
             prep_fsync(sqe, self.fd, nvme_flush=(mode == "passthru"))
         self.stats.fsyncs += 1
         return IoRequest(prep)
+
+    # ---------------------------------------------------------- truncate
+
+    def truncate_to(self, lsn: int) -> int:
+        """Reclaim log space below ``lsn`` (a record boundary — the
+        caller derives it from the checkpoint's min recLSN and the
+        oldest in-flight txn's BEGIN; see StorageEngine.checkpoint).
+
+        Whole blocks strictly below ``lsn`` are zeroed on the device and
+        the header block is rewritten with the new ``truncated_lsn`` so
+        a post-crash ``scan_log`` starts there instead of reading zeroes
+        as a torn record.  Like the bootstrap header write, the device
+        image is updated directly (a real WAL would recycle segment
+        files; our LSNs are absolute byte offsets).  Returns the number
+        of bytes reclaimed."""
+        lsn = min(lsn, self.durable_lsn)
+        if lsn <= self.truncated_lsn:
+            return 0
+        lo = (self.truncated_lsn // BLOCK) * BLOCK
+        hi = (lsn // BLOCK) * BLOCK
+        if hi > lo:
+            zero = bytes(hi - max(lo, BLOCK))
+            self.disk.image[max(lo, BLOCK):hi] = zero
+            self.buf[max(lo, BLOCK):hi] = zero
+        self.truncated_lsn = lsn
+        self.header.truncated_lsn = lsn
+        hdr_block = encode_header(self.header)
+        self.buf[:BLOCK] = hdr_block
+        self.disk.image[:BLOCK] = hdr_block
+        self.stats.truncations += 1
+        self.stats.bytes_reclaimed += max(0, hi - max(lo, BLOCK))
+        return max(0, hi - max(lo, BLOCK))

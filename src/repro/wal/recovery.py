@@ -55,6 +55,7 @@ class RecoveryReport:
     checkpoint_lsn: Optional[int] = None
     redo_start: int = 0               # min recLSN of the last checkpoint
     dpt_size: int = 0
+    truncated_lsn: int = 0            # log reclaimed below this LSN
 
 
 class RecoveredEngine:
@@ -136,7 +137,8 @@ def recover(data_image: bytes, log_image: bytes, *,
 
     rep = RecoveryReport(records=len(records),
                          winners=set(commit_lsn), losers=losers,
-                         aborted=aborted)
+                         aborted=aborted,
+                         truncated_lsn=hdr.truncated_lsn)
     if ckpt is not None:
         rep.checkpoint_lsn = ckpt.lsn
         _, _, dpt = decode_checkpoint(ckpt.payload)

@@ -1,10 +1,12 @@
-"""Ring semantics: batching, execution paths, flags, linking."""
+"""Ring semantics: batching, execution paths, flags, linking, multishot
+recv with provided buffer rings, and SEND_ZC notification ordering."""
 
 import pytest
 
-from repro.core import (IoUring, SetupFlags, SimNVMe, Timeline, CqeFlags,
-                        NVMeSpec, SqeFlags)
+from repro.core import (IoUring, NICSpec, SetupFlags, SimNVMe, SimNetwork,
+                        SimSocket, Timeline, CqeFlags, NVMeSpec, SqeFlags)
 from repro.core import ring as R
+from repro.core.sqe import EAGAIN
 
 
 def make_ring(setup=SetupFlags.DEFER_TASKRUN | SetupFlags.SINGLE_ISSUER,
@@ -14,6 +16,17 @@ def make_ring(setup=SetupFlags.DEFER_TASKRUN | SetupFlags.SINGLE_ISSUER,
     dev = SimNVMe(tl, spec or NVMeSpec())
     ring.register_device(3, dev)
     return tl, ring, dev
+
+
+def make_socket_rings(setup=SetupFlags.DEFER_TASKRUN |
+                      SetupFlags.SINGLE_ISSUER):
+    tl = Timeline()
+    net = SimNetwork(tl, 2, NICSpec())
+    sa, sb = SimSocket.pair(net, 0, 1)
+    ra, rb = IoUring(tl, setup=setup), IoUring(tl, setup=setup)
+    ra.register_device(4, sa)
+    rb.register_device(4, sb)
+    return tl, ra, rb
 
 
 def test_single_read_latency():
@@ -124,6 +137,118 @@ def test_link_timeout_cancels_slow_op():
     results = {c.user_data: c.res for c in cqes}
     assert results[1] < 0          # canceled
     assert tl.now < 2e-3           # did not wait the full 5 ms
+
+
+def test_send_zc_emits_completion_then_notif():
+    """Kernel >= 6.0 semantics: SEND_ZC posts TWO CQEs — the request
+    completion carrying MORE, then the buffer-release ZC_NOTIF once the
+    NIC has drained the pinned buffer."""
+    tl, ra, rb = make_socket_rings()
+    sqe = ra.get_sqe()
+    R.prep_send(sqe, 4, 1 << 20, user_data=7, zero_copy=True)
+    ra.submit()
+    first, notif = ra.wait_cqes(2)
+    assert first.user_data == notif.user_data == 7
+    assert first.res == 1 << 20
+    assert first.flags & CqeFlags.MORE
+    assert not (first.flags & CqeFlags.ZC_NOTIF)
+    assert notif.flags & CqeFlags.ZC_NOTIF
+    assert not (notif.flags & CqeFlags.MORE)
+    assert notif.res == 0
+    # the buffer is released only when the NIC drained it (1 MiB at
+    # 50 GB/s ~ 21 us), strictly after the request completion
+    assert notif.t_complete > first.t_complete
+    assert notif.t_complete >= (1 << 20) / 50e9 * 0.9
+    assert ra.stats.zc_notifs == 1
+    # zero-copy: no bounce bytes on the tx path
+    assert ra.stats.bounce_bytes_copied == 0
+
+
+def test_multishot_recv_one_sqe_many_cqes():
+    """One MULTISHOT SQE yields one CQE per message, each flagged MORE;
+    no re-arm submission is needed (stats show a single enter)."""
+    tl, ra, rb = make_socket_rings()
+    for i in range(6):
+        sqe = rb.get_sqe()
+        R.prep_send(sqe, 4, 256, user_data=i)
+    rb.submit()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=9, flags=SqeFlags.MULTISHOT)
+    ra.submit()
+    cqes = ra.wait_cqes(6)
+    assert all(c.user_data == 9 for c in cqes)
+    assert all(c.res == 256 for c in cqes)
+    assert all(c.flags & CqeFlags.MORE for c in cqes)
+    assert ra.stats.enters == 1
+    assert ra.stats.multishot_cqes == 6
+
+
+def test_multishot_with_buf_ring_assigns_buffers():
+    tl, ra, rb = make_socket_rings()
+    br = ra.register_buf_ring(bgid=1, n_bufs=4, buf_size=512)
+    for _ in range(3):
+        sqe = rb.get_sqe()
+        R.prep_send(sqe, 4, 512)
+    rb.submit()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=1, flags=SqeFlags.MULTISHOT,
+                buf_group=1)
+    ra.submit()
+    cqes = ra.wait_cqes(3)
+    bids = [c.buf_id for c in cqes]
+    assert sorted(bids) == [0, 1, 2]          # distinct provided buffers
+    assert br.available() == 1
+    for b in bids:
+        ra.buf_ring_recycle(1, b)
+    assert br.available() == 4
+
+
+def test_buf_ring_exhaustion_terminates_with_eagain():
+    """Paper §4.2: when the provided buffer ring runs dry the multishot
+    recv ends with EAGAIN and NO MORE flag; after recycling, a re-armed
+    SQE picks up the still-queued message."""
+    tl, ra, rb = make_socket_rings()
+    ra.register_buf_ring(bgid=7, n_bufs=2, buf_size=512)
+    for _ in range(3):
+        sqe = rb.get_sqe()
+        R.prep_send(sqe, 4, 512)
+    rb.submit()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=5, flags=SqeFlags.MULTISHOT,
+                buf_group=7)
+    ra.submit()
+    c1, c2, term = ra.wait_cqes(3)
+    assert (c1.res, c2.res) == (512, 512)
+    assert c1.flags & CqeFlags.MORE and c2.flags & CqeFlags.MORE
+    assert term.res == EAGAIN
+    assert not (term.flags & CqeFlags.MORE)   # stream is terminated
+    assert ra.stats.buf_ring_exhausted == 1
+    # recycle + re-arm: the third message is still queued in the socket
+    ra.buf_ring_recycle(7, c1.buf_id)
+    ra.buf_ring_recycle(7, c2.buf_id)
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=6, flags=SqeFlags.MULTISHOT,
+                buf_group=7)
+    ra.submit()
+    c3 = ra.wait_cqe()
+    assert c3.user_data == 6 and c3.res == 512
+    assert c3.flags & CqeFlags.MORE
+
+
+def test_multishot_cancel_disarms_waiter():
+    tl, ra, rb = make_socket_rings()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=3, flags=SqeFlags.MULTISHOT)
+    ra.submit()
+    assert ra.cancel(3) is True
+    assert ra.cancel(3) is False              # already disarmed
+    # a message sent now is queued, not delivered to the dead waiter
+    sqe = rb.get_sqe()
+    R.prep_send(sqe, 4, 64)
+    rb.submit()
+    rb.wait_cqe()
+    tl.run_until(tl.now + 1e-3)
+    assert ra.peek_cqe() is None
 
 
 def test_registered_buffers_skip_bounce_copies():

@@ -1,6 +1,8 @@
 """Paper Fig. 5: the YCSB design ladder, with the paper's own analytic
 model predictions printed next to each measurement (§3.2 methodology)."""
 
+from dataclasses import replace
+
 from benchmarks.common import emit, section
 from repro.core.perfmodel import (CycleModel, LatencyModel, PAPER_C_TX,
                                   PAPER_C_READ_BATCH, PAPER_C_READ_SINGLE,
@@ -18,8 +20,10 @@ def run(n_txns: int = 2500):
     fault = None
     for cfg in EngineConfig.ladder():
         if cfg.name not in PAPER_TPS:
-            continue          # durability rungs: see bench_wal (Fig. 9)
-        cfg.pool_frames = 2048
+            continue          # durability rungs: see bench_wal (Fig. 9);
+                              # multi-core rungs: see bench_tpcc scale-up
+        # ladder() entries are shared: copy, don't mutate in place
+        cfg = replace(cfg, pool_frames=2048)
         eng = StorageEngine(cfg, n_tuples=200_000)
         res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),
                              n_txns)

@@ -3,11 +3,20 @@
 Each thread is an independent ring on its own core; aggregate IOPS =
 min(threads / cpu_per_op, device array limit). cpu_per_op is MEASURED from
 a single-ring run per configuration; the device limit comes from the
-NVMe spec (8 x 2.45M IOPS)."""
+NVMe spec (8 x 2.45M IOPS).
+
+The second section replaces arithmetic with the REAL engine: YCSB
+out-of-memory updates on the multi-core storage engine, ring-per-core
+vs one contended shared ring, at 1/2/4/8 cores — the paper's Fig. 7
+shape re-measured through the full fiber/pool/B-tree stack."""
+
+from dataclasses import replace
 
 from benchmarks.common import emit, section
 from repro.core import IoUring, NVMeSpec, SetupFlags, SimNVMe, Timeline
 from repro.core import ring as R
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
 
 CONFIGS = [
     ("libaio-like", dict(fixed=False, passthru=False, iopoll=False,
@@ -46,7 +55,7 @@ def measure_cpu_per_op(fixed, passthru, iopoll, extra_cycles) -> float:
     return (ring.stats.cpu_seconds_app + extra_cycles / 3.7e9 * n) / n
 
 
-def run():
+def run(n_txns: int = 800, core_counts=(1, 2, 4, 8)):
     section("thread scale-out, random 4 KiB reads (paper Fig. 7)")
     spec = NVMeSpec()
     dev_limit = spec.n_ssds * spec.iops_per_ssd
@@ -57,3 +66,23 @@ def run():
             emit(f"fig7/{name}/threads={threads}/miops",
                  round(iops / 1e6, 2),
                  "device-bound" if iops >= dev_limit else "cpu-bound")
+
+    section("engine scale-up, YCSB out-of-memory (ring-per-core vs "
+            "shared ring)")
+    base = None
+    for n in core_counts:
+        for shared in (False, True):
+            if shared and n == 1:
+                continue            # one core cannot contend with itself
+            cfg = replace(EngineConfig.multicore(n, shared_ring=shared),
+                          pool_frames=1024)
+            eng = StorageEngine(cfg, n_tuples=60_000)
+            res = eng.run_fibers(
+                lambda rng, e=eng: ycsb_update_txn(e, rng), n_txns)
+            if base is None:
+                base = res["tps"]
+            kind = "shared-ring" if shared else "ring-per-core"
+            emit(f"fig7/engine/{kind}/cores={n}/tps", round(res["tps"]),
+                 f"speedup={res['tps'] / base:.2f} "
+                 f"enters={res['enters']} "
+                 f"batch_eff={res['batch_eff']:.1f}")

@@ -1,22 +1,34 @@
 """Paper Fig. 6: TPC-C in-memory (1 WH) vs out-of-memory (many WH);
-blocking-read baseline (vmcache-style) vs the asynchronous engine."""
+blocking-read baseline (vmcache-style) vs the asynchronous engine.
+
+Extended (PR 4) with the multi-core scale-up curve: tps vs core count
+at 1/2/4/8 cores for ring-per-core (``+MultiCore(N)``) and the
+shared-ring anti-pattern at 4 cores (``+SharedRing(4)``), in-memory
+and out-of-memory — the experiment the paper's "one ring per thread"
+guideline predicts, with the contended shared ring as the control."""
+
+from dataclasses import replace
 
 from benchmarks.common import emit, section
 from repro.storage.engine import EngineConfig, StorageEngine
 from repro.storage.workloads import TPCCLite
 
 
-def run(n_txns: int = 1200):
+def _rows(W: int) -> int:
+    return W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
+
+
+def run(n_txns: int = 1200, core_counts=(1, 2, 4, 8)):
     section("TPC-C (paper Fig. 6)")
     ladder = {c.name: c for c in EngineConfig.ladder()}
     # +GroupCommit: the durable variant — same engine but every write
     # txn commits through the WAL (one linked write->fsync per batch)
     for W in (1, 20):
         for name in ("posix", "+BatchSubmit", "+IOPoll", "+GroupCommit"):
-            cfg = ladder[name]
-            cfg.pool_frames = 4096
-            n_rows = W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
-            eng = StorageEngine(cfg, n_tuples=n_rows + 100)
+            # ladder() entries are shared config instances: copy before
+            # overriding, never mutate in place
+            cfg = replace(ladder[name], pool_frames=4096)
+            eng = StorageEngine(cfg, n_tuples=_rows(W) + 100)
             tp = TPCCLite(eng, W)
             res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
             fault = res["faults"] / max(1, res["faults"] + res["hits"])
@@ -25,3 +37,27 @@ def run(n_txns: int = 1200):
                 extra += (f" fsyncs={res['fsyncs']}"
                           f" group={res['group_size']:.1f}")
             emit(f"fig6/W={W}/{name}/tps", round(res["tps"]), extra)
+
+    section("TPC-C multi-core scale-up (ring-per-core vs shared ring)")
+    for W in (1, 20):
+        base_tps = None
+        for n in core_counts:
+            cfg = replace(EngineConfig.multicore(n), pool_frames=4096)
+            eng = StorageEngine(cfg, n_tuples=_rows(W) + 100)
+            tp = TPCCLite(eng, W)
+            res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
+            if base_tps is None:
+                base_tps = res["tps"]
+            emit(f"fig6/scaleup/W={W}/cores={n}/tps", round(res["tps"]),
+                 f"speedup={res['tps'] / base_tps:.2f} "
+                 f"enters={res['enters']} "
+                 f"latch_cross={res.get('latch_cross', 0)}")
+        # the anti-pattern control: same 4 cores, ONE contended ring
+        cfg = replace(EngineConfig.multicore(4, shared_ring=True),
+                      pool_frames=4096)
+        eng = StorageEngine(cfg, n_tuples=_rows(W) + 100)
+        tp = TPCCLite(eng, W)
+        res = eng.run_fibers(lambda rng: tp.txn(rng), n_txns)
+        emit(f"fig6/scaleup/W={W}/shared_ring_4/tps", round(res["tps"]),
+             f"speedup={res['tps'] / base_tps:.2f} vs ring-per-core: "
+             f"the serialized SQ lock + IPI completions eat the cores")

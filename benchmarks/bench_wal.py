@@ -18,7 +18,20 @@ Three sweeps:
   fig9wal/tpcc    durable TPC-C: throughput of the non-durable engine
                   vs the three durability rungs, plus WAL volume and
                   the WAL-induced eviction waits.
+
+  fig9wal/adaptive  group size vs commit latency under the adaptive
+                  flush policy (ROADMAP satellite): the leader defers
+                  the flush on the inflight-vs-queued signal
+                  (core.adaptive.AdaptiveFlush) instead of flushing
+                  everything appended, trading commit latency for
+                  fsync amortization.
+
+  fig9wal/mc      multi-core durability: cross-core commit queues into
+                  ONE leader fiber — fsyncs/txn stays amortized while
+                  tps scales with the cores.
 """
+
+from dataclasses import replace
 
 from benchmarks.common import emit, section
 from repro.core import NVMeSpec
@@ -35,12 +48,13 @@ RUNGS = [("+WAL", "wal"), ("+GroupCommit", "group"),
 
 
 def _engine(name, durability, *, n_fibers=128, n_tuples=50_000,
-            frames=2048, spec=None):
+            frames=2048, spec=None, adaptive_commit=False):
     cfg = EngineConfig(
         name, n_fibers=n_fibers, pool_frames=frames,
         durability=durability,
         fixed_bufs=durability in ("group", "passthru-flush"),
-        passthrough=durability == "passthru-flush")
+        passthrough=durability == "passthru-flush",
+        adaptive_commit=adaptive_commit)
     return StorageEngine(cfg, n_tuples=n_tuples, spec=spec)
 
 
@@ -66,6 +80,37 @@ def run(n_txns: int = 768):
         emit(f"fig9wal/group/fibers={n_fibers}/fsyncs_per_txn",
              round(res["fsyncs_per_txn"], 3),
              f"group={res['group_size']:.1f} tps={res['tps']:.0f} "
+             f"commit_us={res['commit_wait_us']:.0f}")
+
+    # -- adaptive flush: group size vs commit latency, eager vs adaptive
+    for ssd in ("enterprise", "consumer"):
+        for n_fibers in (8, 32, 128):
+            row = {}
+            for label, adaptive in (("eager", False), ("adaptive", True)):
+                eng = _engine("+GroupCommit", "group", n_fibers=n_fibers,
+                              spec=NVMeSpec(**SSDS[ssd]),
+                              adaptive_commit=adaptive)
+                res = eng.run_fibers(
+                    lambda rng, e=eng: ycsb_update_txn(e, rng), n_txns)
+                row[label] = res
+                emit(f"fig9wal/adaptive/{ssd}/fibers={n_fibers}/"
+                     f"{label}/group", round(res["group_size"], 1),
+                     f"commit_us={res['commit_wait_us']:.0f} "
+                     f"fsyncs_per_txn={res['fsyncs_per_txn']:.3f} "
+                     f"tps={res['tps']:.0f}")
+
+    # -- multi-core group commit: one leader fiber, cross-core queues
+    for n in (1, 4):
+        cfg = replace(EngineConfig.multicore(n, durability="group",
+                                             fixed_bufs=True),
+                      pool_frames=2048)
+        eng = StorageEngine(cfg, n_tuples=50_000,
+                            spec=NVMeSpec(**SSDS["enterprise"]))
+        res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),
+                             n_txns)
+        emit(f"fig9wal/mc/cores={n}/tps", round(res["tps"]),
+             f"fsyncs_per_txn={res['fsyncs_per_txn']:.3f} "
+             f"group={res['group_size']:.1f} "
              f"commit_us={res['commit_wait_us']:.0f}")
 
     # -- durable TPC-C (the PostgreSQL-case-study shape: WAL dominates)

@@ -3,13 +3,21 @@
 Prints ``name,value,derived`` CSV rows (plus section comments).
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig5,fig11]
                                                [--smoke]
+                                               [--json BENCH.json]
 
 ``--smoke`` runs every module at tiny sizes (~30 s total) so CI can
 verify the bench modules still import and execute end-to-end —
 scripts/check.sh runs it after the test suite.
+
+``--json PATH`` additionally dumps every emitted row as JSON, so the
+bench trajectory is machine-readable across PRs (tps per ladder rung
+and per core count, shuffle egress, WAL fsync amortization, ...):
+
+    {"meta": {...}, "rows": [{"name": ..., "value": ..., "derived": ...}]}
 """
 
 import argparse
+import json
 import time
 
 
@@ -32,7 +40,8 @@ MODULES = [
 #: enough to run with their defaults (a few seconds each)
 SMOKE_KW = {
     "fig5": {"n_txns": 120},
-    "fig6": {"n_txns": 60},
+    "fig6": {"n_txns": 60, "core_counts": (1, 2)},
+    "fig7": {"n_txns": 120, "core_counts": (1, 2)},
     "fig9wal": {"n_txns": 96},
     "fig11-14": {"smoke": True},
     "fig17": {"n_txns": 120},
@@ -45,11 +54,15 @@ def main() -> None:
                     help="comma-separated module keys to run")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: exercise every module quickly")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write all emitted rows to PATH as JSON")
     args = ap.parse_args()
     only = set(k for k in args.only.split(",") if k)
 
     import importlib
+    from benchmarks.common import ROWS
     t00 = time.time()
+    timings = {}
     for key, modname in MODULES:
         if only and key not in only:
             continue
@@ -57,8 +70,21 @@ def main() -> None:
         mod = importlib.import_module(modname)
         kw = SMOKE_KW.get(key, {}) if args.smoke else {}
         mod.run(**kw)
-        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+        timings[key] = round(time.time() - t0, 1)
+        print(f"# {key} done in {timings[key]}s", flush=True)
     print(f"# all benchmarks done in {time.time()-t00:.1f}s", flush=True)
+    if args.json:
+        payload = {
+            "meta": {"smoke": args.smoke, "only": sorted(only),
+                     "module_seconds": timings,
+                     "elapsed_s": round(time.time() - t00, 1)},
+            "rows": [{"name": n, "value": v, "derived": d}
+                     for n, v, d in ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['rows'])} rows to {args.json}",
+              flush=True)
 
 
 if __name__ == "__main__":

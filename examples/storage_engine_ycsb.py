@@ -5,6 +5,7 @@ ladder on YCSB and print measured vs modeled throughput.
 """
 
 import argparse
+from dataclasses import replace
 
 from repro.core.perfmodel import (CycleModel, LatencyModel, PAPER_C_TX,
                                   PAPER_C_READ_BATCH, PAPER_C_WRITE_BATCH)
@@ -20,12 +21,13 @@ def main():
     print(f"{'config':14s} {'tx/s':>10s} {'fault':>6s} {'enters':>7s} "
           f"{'batch':>6s} {'workers':>8s}")
     for cfg in EngineConfig.ladder():
-        # Fig. 5 is the non-durable ladder; durability rungs are
-        # covered by benchmarks/bench_wal.py (Fig. 9)
-        if cfg.durability != "none":
+        # Fig. 5 is the non-durable single-core ladder; durability rungs
+        # are covered by benchmarks/bench_wal.py (Fig. 9) and the
+        # multi-core rungs by benchmarks/bench_tpcc.py's scale-up curve
+        if cfg.durability != "none" or cfg.n_cores > 1:
             continue
-        cfg.pool_frames = 2048
-        eng = StorageEngine(cfg, n_tuples=200_000)
+        cfg = replace(cfg, pool_frames=2048)   # ladder() configs are
+        eng = StorageEngine(cfg, n_tuples=200_000)  # shared: never mutate
         res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),
                              args.txns)
         fault = res["faults"] / max(1, res["faults"] + res["hits"]) * 3

@@ -2,10 +2,11 @@
 # One-step verify entrypoint:
 #   1. the tier-1 test suite exactly as the ROADMAP specifies
 #   2. a fast-mode benchmark smoke (tiny sizes) so bench modules can't
-#      silently rot — every paper-figure module must import and run
+#      silently rot — every paper-figure module must import and run,
+#      and the machine-readable snapshot path (--json) is exercised too
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
-python -m benchmarks.run --smoke
+python -m benchmarks.run --smoke --json BENCH_smoke.json

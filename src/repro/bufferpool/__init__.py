@@ -1,1 +1,2 @@
-from repro.bufferpool.pool import BufferPool, PoolConfig
+from repro.bufferpool.pool import (BufferPool, PartitionedBufferPool,
+                                   PoolConfig)

@@ -18,7 +18,7 @@ to the synchronous baseline exactly as in the paper.
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Generator, List, Optional
 
 from repro.core import IoRequest
@@ -42,6 +42,9 @@ class PoolConfig:
     fixed_bufs: bool = True          # registered buffers
     passthrough: bool = False        # NVMe passthrough (no filesystem)
     fd: int = 3
+    buf_base: int = 0                # registered-buffer slot of frame 0
+                                     # (partitions of a sharded pool all
+                                     # index one shared buffer table)
 
 
 @dataclass
@@ -62,7 +65,9 @@ class BufferPool:
         ps = cfg.page_size
         self.frames: List[bytearray] = [bytearray(ps)
                                         for _ in range(cfg.n_frames)]
-        if cfg.fixed_bufs:
+        if cfg.fixed_bufs and ring is not None:
+            # a partition of a sharded pool passes ring=None: the engine
+            # registers the concatenated frame table on every ring
             ring.register_buffers(self.frames)
         self.meta = [Frame() for _ in range(cfg.n_frames)]
         self.table: Dict[int, int] = {}
@@ -133,7 +138,8 @@ class BufferPool:
 
         def prep(sqe, ud, idx=idx, off=off):
             if cfg.fixed_bufs:
-                prep_read_fixed(sqe, cfg.fd, idx, off, cfg.page_size)
+                prep_read_fixed(sqe, cfg.fd, cfg.buf_base + idx, off,
+                                cfg.page_size)
             else:
                 prep_read(sqe, cfg.fd, memoryview(self.frames[idx]), off,
                           cfg.page_size)
@@ -328,10 +334,183 @@ class BufferPool:
 
         def prep(sqe, ud, idx=idx, off=off):
             if cfg.fixed_bufs:
-                prep_write_fixed(sqe, cfg.fd, idx, off, cfg.page_size)
+                prep_write_fixed(sqe, cfg.fd, cfg.buf_base + idx, off,
+                                 cfg.page_size)
             else:
                 prep_write(sqe, cfg.fd, memoryview(self.frames[idx]), off,
                            cfg.page_size)
             if cfg.passthrough:
                 sqe.cmd = "passthru"
         return IoRequest(prep)
+
+
+# ---------------------------------------------------------------------------
+# partitioned pool (multi-core scale-up)
+# ---------------------------------------------------------------------------
+
+class _PartitionTable:
+    """Read-only {pid -> global frame idx} view over all partitions."""
+
+    __slots__ = ("pp",)
+
+    def __init__(self, pp: "PartitionedBufferPool"):
+        self.pp = pp
+
+    def __getitem__(self, pid: int) -> int:
+        pp = self.pp
+        p = pid % pp.n_parts
+        return p * pp.frames_per_part + pp.parts[p].table[pid]
+
+    def get(self, pid: int, default=None):
+        try:
+            return self[pid]
+        except KeyError:
+            return default
+
+    def __contains__(self, pid: int) -> bool:
+        return pid in self.pp.parts[pid % self.pp.n_parts].table
+
+    def __len__(self) -> int:
+        return sum(len(p.table) for p in self.pp.parts)
+
+
+class PartitionedBufferPool:
+    """Hash-partitioned buffer pool for the multi-core storage engine.
+
+    Frames are sharded into ``n_parts`` independent ``BufferPool``
+    partitions (``pid % n_parts``), each with its own hash table, free
+    list and clock hand — the classic scale-up recipe: cores mostly
+    touch their own partition's metadata and never contend on a global
+    latch.  Partition p is *owned* by core p; an access from any other
+    core charges a modeled partition-latch handoff (cache-line transfer
+    + atomic) to the accessing core, so cross-partition traffic shows
+    up in the throughput curve instead of being free.
+
+    The accessing core is tracked via ``cur_core``, set by the
+    scheduler's ``on_resume`` hook — correct because everything between
+    two fiber suspension points executes synchronously.
+
+    Frame indices returned by ``fix`` are *global*
+    (``part * frames_per_part + local``), so callers (B-tree, WAL
+    APPLY framing, page-LSN stamping) are oblivious to the sharding.
+    Partitions are built with ``ring=None``: with registered buffers
+    the engine registers the concatenated frame table on every core's
+    ring, and each partition addresses it through ``PoolConfig.buf_base``.
+    """
+
+    def __init__(self, cfg: PoolConfig, *, n_parts: int, tl, cores,
+                 latch_cycles: float = 300.0, clock_hz: float = 3.7e9):
+        assert n_parts >= 1
+        per = cfg.n_frames // n_parts
+        assert per >= 2 * cfg.evict_batch, \
+            "pool too small for the partition count"
+        self.cfg = replace(cfg, n_frames=per * n_parts)
+        self.n_parts = n_parts
+        self.frames_per_part = per
+        self.parts: List[BufferPool] = [
+            BufferPool(None, replace(cfg, n_frames=per,
+                                     buf_base=cfg.buf_base + p * per))
+            for p in range(n_parts)]
+        self.tl = tl
+        self.cores = cores
+        self.latch_s = latch_cycles / clock_hz
+        self.cur_core = 0
+        self.table = _PartitionTable(self)
+        self.latch_cross = 0             # cross-partition fixes (paid)
+        self.latch_local = 0             # own-partition fixes (free)
+
+    # ------------------------------------------------------- delegation
+
+    def _latch(self, part: int) -> None:
+        if part == self.cur_core % self.n_parts:
+            self.latch_local += 1
+            return
+        self.latch_cross += 1
+        self.cores[self.cur_core].charge(self.tl.now, self.latch_s)
+
+    def fix(self, pid: int) -> Generator:
+        p = pid % self.n_parts
+        self._latch(p)
+        idx = yield from self.parts[p].fix(pid)
+        return p * self.frames_per_part + idx
+
+    def unfix(self, idx: int, dirty: bool = False) -> None:
+        self.parts[idx // self.frames_per_part].unfix(
+            idx % self.frames_per_part, dirty)
+
+    def page(self, idx: int) -> bytearray:
+        return self.parts[idx // self.frames_per_part].page(
+            idx % self.frames_per_part)
+
+    def stamp_lsn(self, idx: int, lsn: int) -> None:
+        self.parts[idx // self.frames_per_part].stamp_lsn(
+            idx % self.frames_per_part, lsn)
+
+    def page_lsn(self, idx: int) -> int:
+        return self.parts[idx // self.frames_per_part].page_lsn(
+            idx % self.frames_per_part)
+
+    def adopt_new_page(self, pid: int) -> int:
+        p = pid % self.n_parts
+        self._latch(p)
+        return p * self.frames_per_part + self.parts[p].adopt_new_page(pid)
+
+    def unfix_new(self, idx: int) -> None:
+        self.unfix(idx, dirty=True)
+
+    def dirty_page_table(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for p in self.parts:
+            out.update(p.dirty_page_table())
+        return out
+
+    def clean_some(self) -> Generator:
+        """One checkpoint-flush batch per partition; returns the total
+        cleaned (0 only once every partition is clean)."""
+        total = 0
+        for p in self.parts:
+            total += yield from p.clean_some()
+        return total
+
+    def evict_some(self) -> Generator:
+        total = 0
+        for p in self.parts:
+            total += yield from p.evict_some()
+        return total
+
+    # ------------------------------------------------------- aggregates
+
+    @property
+    def frames(self) -> List[bytearray]:
+        """Concatenated frame table in global-index order (registered-
+        buffer slot i is frame i)."""
+        return [f for p in self.parts for f in p.frames]
+
+    @property
+    def wal(self):
+        return self.parts[0].wal
+
+    @wal.setter
+    def wal(self, w) -> None:
+        for p in self.parts:
+            p.wal = w
+
+    @property
+    def hits(self) -> int:
+        return sum(p.hits for p in self.parts)
+
+    @property
+    def faults(self) -> int:
+        return sum(p.faults for p in self.parts)
+
+    @property
+    def evictions(self) -> int:
+        return sum(p.evictions for p in self.parts)
+
+    @property
+    def writebacks(self) -> int:
+        return sum(p.writebacks for p in self.parts)
+
+    @property
+    def wal_waits(self) -> int:
+        return sum(p.wal_waits for p in self.parts)

@@ -6,13 +6,14 @@ the shuffle engine (§4), and the framework's own data pipeline and
 checkpointing substrates.
 """
 
-from repro.core.adaptive import AdaptiveBatcher, EagerSubmit, FixedBatch
+from repro.core.adaptive import (AdaptiveBatcher, AdaptiveFlush, EagerSubmit,
+                                 FixedBatch)
 from repro.core.backends import (FileBackend, NICSpec, NVMeSpec, SimNVMe,
                                  SimNetwork, SimSocket)
 from repro.core.clock import CpuTimer, RealClock, VirtualClock
 from repro.core.costs import DEFAULT_COSTS, CostModel
-from repro.core.fibers import (Fiber, FiberScheduler, IoRequest, StreamClose,
-                               StreamRead)
+from repro.core.fibers import (Fiber, FiberScheduler, Gate, IoRequest,
+                               StreamClose, StreamRead)
 from repro.core.ring import (BufferRing, IoUring, prep_fsync, prep_nop,
                              prep_read, prep_read_fixed, prep_recv,
                              prep_send, prep_timeout, prep_uring_cmd,

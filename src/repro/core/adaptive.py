@@ -34,6 +34,27 @@ class FixedBatch(SubmitPolicy):
 
 
 @dataclass
+class AdaptiveFlush(SubmitPolicy):
+    """Group-commit flush decision (ROADMAP: the paper's adaptive
+    batching signal applied to the WAL).  The leader reuses the
+    ``SubmitPolicy`` shape with the same semantics tilted toward
+    durability: ``queued`` is the number of commit LSNs waiting,
+    ``inflight`` the I/Os outstanding on the engine's rings, ``ready``
+    the runnable fibers.  An idle device means the flush would complete
+    immediately — take the latency win; a busy device means committers
+    keep arriving while earlier I/O drains — defer and grow the group."""
+    min_group: int = 2
+    max_group: int = 64
+
+    def should_flush(self, *, queued, inflight, ready):
+        if inflight == 0:
+            return True               # device idle: flush now (latency)
+        target = self.min_group + (self.max_group - self.min_group) * \
+            min(1.0, inflight / max(1, inflight + ready))
+        return queued >= target
+
+
+@dataclass
 class AdaptiveBatcher(SubmitPolicy):
     """Flush when (a) the ready queue ran dry (device must not starve),
     or (b) the batch has grown past a target that scales with how busy

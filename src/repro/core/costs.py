@@ -31,6 +31,9 @@ class CostModel:
     complete_polled: int = 260    # IOPoll: reap from device queue
     task_work: int = 300          # place CQE (DeferTR: inside enter)
     preempt_ipi: int = 1_800      # default mode: IPI preemption (CoopTR: 0)
+    ring_lock: int = 400          # shared-ring anti-pattern: lock handoff
+                                  # (cache-line transfer + CAS) per enter
+                                  # on a ring submitted to by many cores
     # per-op feature deltas
     pin_copy: int = 700           # avoided by registered buffers (storage)
     storage_stack: int = 3_200    # avoided by NVMe passthrough

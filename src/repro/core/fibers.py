@@ -18,6 +18,8 @@ A fiber may yield:
     stream.  SEND_ZC's deferred ``ZC_NOTIF`` is reaped the same way:
     the send's first CQE carries ``MORE`` and auto-opens a stream,
   * ``StreamClose(ud)``     → cancel a still-armed multishot op,
+  * a ``Gate``              → park until another fiber opens the gate
+    (condition wait without ready-queue spinning),
   * ``None``                → cooperative yield (re-queued).
 
 Because all concurrency is cooperative, data structures need no locks
@@ -74,6 +76,32 @@ class StreamClose:
     ud: int
 
 
+class Gate:
+    """Parking lot for condition waits: ``yield gate`` suspends the
+    calling fiber until another fiber calls ``gate.open()`` (which wakes
+    every parked fiber; each re-checks its condition and may re-park).
+
+    Spinning on ``yield None`` keeps a fiber in the ready queue, so a
+    hundred commit waiters would burn a scheduler resume each per step;
+    parked fibers cost nothing until the gate opens.  Always ``open()``
+    any gate another fiber may be parked on BEFORE parking yourself —
+    parked fibers are invisible to the scheduler's termination check."""
+
+    __slots__ = ("_sched", "_parked")
+
+    def __init__(self, sched: "FiberScheduler"):
+        self._sched = sched
+        self._parked: List[Fiber] = []
+
+    def open(self) -> int:
+        """Wake every parked fiber; returns how many were woken."""
+        n = len(self._parked)
+        if n:
+            self._sched.ready.extend((f, None) for f in self._parked)
+            self._parked.clear()
+        return n
+
+
 class _Stream:
     __slots__ = ("q", "waiter", "done", "owner")
 
@@ -117,6 +145,7 @@ class FiberScheduler:
                  rings: Optional[List[IoUring]] = None,
                  cores: Optional[List[CoreClock]] = None,
                  policy: Optional[SubmitPolicy] = None,
+                 policies: Optional[List[SubmitPolicy]] = None,
                  switch_cost_s: float = 20 / 3.7e9,
                  per_op_submit: bool = False):
         self.rings = rings if rings is not None else [ring]
@@ -125,8 +154,18 @@ class FiberScheduler:
         self.cores = cores
         self.mc = cores is not None
         self.policy = policy or AdaptiveBatcher()
+        # optional per-ring policies (ring-per-core: each core batches
+        # its own submissions independently); fall back to the shared
+        # policy object when absent
+        self.policies = policies
         self.per_op_submit = per_op_submit
         self.ready: deque = deque()
+        # multi-core: arrivals are staged into per-core FIFOs stamped
+        # with a global arrival sequence, so the O(cores) pick below is
+        # order-equivalent to scanning one global ready list
+        self._core_ready: Optional[List[deque]] = \
+            [deque() for _ in cores] if self.mc else None
+        self._rseq = itertools.count()
         self.waiting: Dict[int, Fiber] = {}
         self.streams: Dict[int, _Stream] = {}
         self._orphans: set = set()        # closed streams whose terminal
@@ -137,6 +176,9 @@ class FiberScheduler:
         self._ring_queued = [0] * len(self.rings)
         self._uds = itertools.count(1)
         self.completed_fibers = 0
+        # hook: called with the fiber about to be resumed (the storage
+        # engine uses it to track the current core for CPU/latch charges)
+        self.on_resume: Optional[Callable[[Fiber], None]] = None
 
     # ------------------------------------------------------------------
 
@@ -146,13 +188,20 @@ class FiberScheduler:
         self.ready.append((f, None))
         return f
 
+    def ready_count(self) -> int:
+        """Runnable fibers (staged per-core FIFOs included)."""
+        n = len(self.ready)
+        if self._core_ready is not None:
+            n += sum(len(q) for q in self._core_ready)
+        return n
+
     def run(self, *, until: Optional[Callable[[], bool]] = None) -> None:
         """Run until all fibers finish (or ``until`` returns True)."""
         while True:
             if until is not None and until():
                 return
-            if not self.ready and not self.waiting and not self.streams \
-                    and self._queued == 0:
+            if self.ready_count() == 0 and not self.waiting \
+                    and not self.streams and self._queued == 0:
                 return
             if self.mc:
                 self._step_mc()
@@ -198,29 +247,53 @@ class FiberScheduler:
 
     def _step_mc(self) -> None:
         tl = self.ring.tl
-        if self.ready:
+        cr = self._core_ready
+        while self.ready:                 # stage arrivals per core; the
+            f, v = self.ready.popleft()   # seq stamp preserves the global
+            cr[f.core].append((next(self._rseq), f, v))   # FIFO order
+        best_c, best_t, best_s = -1, float("inf"), float("inf")
+        for c, q in enumerate(cr):
+            if not q:
+                continue
             # conservative PDES: resume the fiber whose core frees
-            # earliest, but only after every timeline event before that
-            # instant has fired (it may ready an even earlier fiber)
-            best_i, best_t = 0, float("inf")
-            for i, (f, _) in enumerate(self.ready):
-                t = max(tl.now, self.cores[f.core].free)
-                if t < best_t:
-                    best_i, best_t = i, t
+            # earliest; ties resolve to the earliest-queued fiber, which
+            # is exactly the order a single global ready-list scan gives
+            t = max(tl.now, self.cores[c].free)
+            if t < best_t or (t == best_t and q[0][0] < best_s):
+                best_c, best_t, best_s = c, t, q[0][0]
+        if best_c >= 0:
+            if self._spins > self.ready_count() + 1:
+                # every runnable fiber is polling a condition (bare
+                # yields) — progress needs the world to move: submit any
+                # queued SQEs and fire the next timeline event, exactly
+                # like the single-core livelock guard
+                self._spins = 0
+                self._flush_all()
+                self._drain_all()
+                if not self.ready and tl.peek() is not None:
+                    tl.run_next()
+                    self._drain_all()
+                return
             nxt = tl.peek()
             if nxt is not None and nxt < best_t:
-                tl.run_next()
-                self._drain_all()
+                tl.run_next()             # an earlier event may ready an
+                self._drain_all()         # even earlier fiber
                 return
-            fiber, send_val = self.ready[best_i]
-            del self.ready[best_i]
+            _, fiber, send_val = cr[best_c].popleft()
             if best_t > tl.now:
                 tl.run_until(best_t)      # no earlier events: just advance
+            before = len(self.ready)
             self._resume(fiber, send_val)
+            if self.ready and len(self.ready) > before and \
+                    self.ready[-1][0] is fiber and self.ready[-1][1] is None:
+                self._spins += 1
+            else:
+                self._spins = 0
             i = fiber.ring_idx
-            if self._ring_queued[i] and self.policy.should_flush(
+            pol = self.policies[i] if self.policies else self.policy
+            if self._ring_queued[i] and pol.should_flush(
                     queued=self._ring_queued[i], inflight=self.inflight,
-                    ready=len(self.ready)):
+                    ready=self.ready_count()):
                 self._flush_ring(i)
             self._drain_all()
             return
@@ -238,6 +311,15 @@ class FiberScheduler:
     # ------------------------------------------------------------------
 
     def _resume(self, fiber: Fiber, send_val) -> None:
+        if self.mc:
+            # a shared (contended) ring is submitted to by many cores:
+            # point its CPU accounting at the fiber about to run.  With
+            # ring-per-core this is the identity assignment.
+            ring = self.rings[fiber.ring_idx]
+            if ring.core is not None:
+                ring.core = self.cores[fiber.core]
+        if self.on_resume is not None:
+            self.on_resume(fiber)
         if self.switch_cost_s:
             if self.mc:
                 self.cores[fiber.core].charge(self.ring.tl.now,
@@ -255,6 +337,9 @@ class FiberScheduler:
             return
         if req is None:                   # cooperative re-queue
             self.ready.append((fiber, None))
+            return
+        if isinstance(req, Gate):         # park until gate.open()
+            req._parked.append(fiber)
             return
         if isinstance(req, StreamRead):
             self._stream_read(fiber, req.ud)

@@ -68,7 +68,8 @@ class IoUring:
     def __init__(self, timeline: Timeline, *, sq_depth: int = 256,
                  cq_depth: int = 0, setup: SetupFlags = SetupFlags.NONE,
                  costs: CostModel = DEFAULT_COSTS, n_workers: int = 32,
-                 core: Optional[CoreClock] = None):
+                 core: Optional[CoreClock] = None,
+                 contended: bool = False):
         self.tl = timeline
         self.sq_depth = sq_depth
         self.cq_depth = cq_depth or sq_depth * 2
@@ -78,6 +79,14 @@ class IoUring:
         # this core's busy-until clock instead of advancing the global
         # timeline, so N worker cores burn cycles concurrently
         self.core = core
+        # SHARED-ring anti-pattern (one ring submitted to by N cores —
+        # the opposite of SINGLE_ISSUER): every kernel-side charge is
+        # serialized through a ring lock (``_lock_free`` horizon) and
+        # each enter pays the lock handoff, so cores queue behind each
+        # other exactly like threads on a contended SQ mutex.  The
+        # scheduler re-points ``core`` at the submitting fiber's core.
+        self.contended = contended
+        self._lock_free = 0.0
         self.sq: deque = deque()
         self.cq: deque = deque()
         self._pending_task_work: deque = deque()   # completed, not yet CQE
@@ -185,6 +194,8 @@ class IoUring:
 
     def _enter(self, to_submit: int, min_complete: int) -> int:
         self.stats.enters += 1
+        if self.contended:
+            self._charge(self.costs.ring_lock, False)
         self._charge(self.costs.syscall, False)
         n = 0
         for _ in range(min(to_submit, len(self.sq))):
@@ -575,7 +586,14 @@ class IoUring:
             # multi-core: occupy this ring's core; the global clock only
             # advances through the event heap (see CoreClock)
             self.stats.cpu_seconds_app += dt
-            self.core.charge(self.tl.now, dt)
+            if self.contended:
+                # shared ring: the charge also holds the ring lock, so
+                # other cores' ring work queues behind it
+                t0 = max(self.tl.now, self.core.free, self._lock_free)
+                self.core.free = t0 + dt
+                self._lock_free = self.core.free
+            else:
+                self.core.charge(self.tl.now, dt)
         else:
             self.stats.cpu_seconds_app += dt
             self.tl.run_until(self.tl.now + dt)

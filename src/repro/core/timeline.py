@@ -26,7 +26,10 @@ class CoreClock:
     N cores can burn cycles concurrently without serializing on the
     global clock.  A ring constructed with ``core=`` charges CPU here
     instead of advancing the timeline; the multi-core ``FiberScheduler``
-    resumes a fiber no earlier than its core's horizon."""
+    resumes a fiber no earlier than its core's horizon.  Used by the
+    shuffle engine (ring-per-worker) and, since the multi-core OLTP
+    rungs, the storage engine (ring-per-core — see
+    ``storage.engine.EngineConfig.multicore``)."""
 
     free: float = 0.0
 

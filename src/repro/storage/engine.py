@@ -22,6 +22,28 @@ the durability rungs:
     +PassthruFlush group commit over a passthrough log device with an
                    NVMe flush command (enterprise/PLP: ~5 µs barrier)
 
+and the multi-core scale-up rungs (paper §3.3 "one ring per thread" /
+§2.2 SINGLE_ISSUER+DEFER_TASKRUN — this is where io_uring's gains
+finally multiply instead of saturating):
+
+    +MultiCore(N)  N cores, ring-per-core (SINGLE_ISSUER+DEFER_TASKRUN,
+                   a private AdaptiveBatcher per ring), hash-partitioned
+                   buffer pool (cross-partition access pays a modeled
+                   latch handoff), 128 worker fibers per core
+    +SharedRing(N) the ANTI-PATTERN baseline: the same N cores but ONE
+                   ring — every get_sqe/submit serializes on a modeled
+                   ring lock and completions IPI the submitting core
+                   (no DEFER_TASKRUN), reproducing the kernel-side
+                   contention that SteelDB blames for cloud-OLTP stalls
+
+``EngineConfig.multicore(n)`` builds either rung for any core count;
+the 1-core engine (``n_cores=1``) takes the exact single-core code path
+of the earlier rungs, bit for bit.  Under a durable rung the multi-core
+engine routes commits through cross-core commit queues into ONE leader
+fiber (``repro.wal.group_commit.MultiCoreGroupCommit``), so fsync
+submission stays single-issuer while commit points arrive from every
+core.
+
 Transactions under a durable rung are redo-only with deferred apply:
 ``Txn.update``/``insert`` stream intent records into the log and buffer
 the write-set; ``StorageEngine.commit`` appends COMMIT, suspends the
@@ -40,12 +62,13 @@ from typing import Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.bufferpool import BufferPool, PoolConfig
-from repro.core import (AdaptiveBatcher, EagerSubmit, FiberScheduler,
-                        IoUring, NVMeSpec, SetupFlags, Timeline)
+from repro.bufferpool import BufferPool, PartitionedBufferPool, PoolConfig
+from repro.core import (AdaptiveBatcher, AdaptiveFlush, CoreClock,
+                        EagerSubmit, FiberScheduler, IoUring, NVMeSpec,
+                        SetupFlags, Timeline)
 from repro.core.backends import SimDisk
 from repro.storage.btree import BTree, bulk_load
-from repro.wal.group_commit import GroupCommit
+from repro.wal.group_commit import GroupCommit, MultiCoreGroupCommit
 from repro.wal.log import (APPLY_DELTA, APPLY_IMG, LogHeader, RecordType,
                            WriteAheadLog, encode_apply, encode_checkpoint,
                            encode_kv, encode_record)
@@ -80,13 +103,24 @@ class EngineConfig:
     durability: str = "none"
     log_capacity: int = 64 * 1024 * 1024
     ckpt_every: int = 0           # fuzzy checkpoint every N commits (0=off)
-    truncate_wal: bool = False    # reclaim log below the checkpoint's
-                                  # redo horizon (min recLSN / oldest txn)
+    truncate_wal: bool = True     # reclaim log below the checkpoint's
+                                  # redo horizon (min recLSN / oldest txn);
+                                  # the checkpoint's txn-table snapshot
+                                  # keeps truncated COMMITs in recovery's
+                                  # winner set, so this defaults on now
+    # multi-core scale-up (the +MultiCore(N)/+SharedRing(N) rungs)
+    n_cores: int = 1              # 1 = the exact single-core code path
+    shared_ring: bool = False     # anti-pattern: one contended ring
+    # group-commit leader defers flushes on the inflight-vs-queued
+    # signal (AdaptiveFlush) instead of flushing eagerly
+    adaptive_commit: bool = False
 
     @staticmethod
     def ladder():
         """The paper's incremental configurations (Fig. 5), in order,
-        extended with the Fig. 9 durability rungs."""
+        extended with the Fig. 9 durability rungs and the multi-core
+        scale-up rungs (ring-per-core vs the shared-ring anti-pattern;
+        see ``EngineConfig.multicore``)."""
         base = dict(pool_frames=8192)
         return [
             EngineConfig("posix", n_fibers=1, batch_evict=False,
@@ -120,7 +154,24 @@ class EngineConfig:
                          adaptive_batch=True, fixed_bufs=True,
                          passthrough=True, durability="passthru-flush",
                          **base),
+            EngineConfig.multicore(4, shared_ring=True),
+            EngineConfig.multicore(4),
         ]
+
+    @classmethod
+    def multicore(cls, n_cores: int, *, shared_ring: bool = False,
+                  **kw) -> "EngineConfig":
+        """The scale-up rung for an arbitrary core count: +BatchSubmit
+        semantics per core, 128 worker fibers per core (capped so the
+        aggregate stays under the device's nr_requests cliff), either
+        ring-per-core (the paper's recommendation) or the one-shared-
+        ring anti-pattern."""
+        name = (f"+SharedRing({n_cores})" if shared_ring
+                else f"+MultiCore({n_cores})")
+        kw.setdefault("pool_frames", 8192)
+        kw.setdefault("n_fibers", min(128 * n_cores, 768))
+        return cls(name, batch_evict=True, adaptive_batch=True,
+                   n_cores=n_cores, shared_ring=shared_ring, **kw)
 
 
 class Txn:
@@ -180,12 +231,34 @@ class StorageEngine:
                  spec: Optional[NVMeSpec] = None, seed: int = 0):
         self.cfg = cfg
         self.tl = Timeline()
+        self.n_cores = max(1, int(cfg.n_cores))
+        self.mc = self.n_cores > 1
         setup = SetupFlags.SINGLE_ISSUER | SetupFlags.DEFER_TASKRUN
         if cfg.iopoll:
             setup |= SetupFlags.IOPOLL
         if cfg.sqpoll:
             setup |= SetupFlags.SQPOLL
-        self.ring = IoUring(self.tl, sq_depth=512, setup=setup)
+        self._cur_core = 0
+        if not self.mc:
+            self.cores: Optional[List[CoreClock]] = None
+            self.ring = IoUring(self.tl, sq_depth=512, setup=setup)
+            self.rings = [self.ring]
+        else:
+            self.cores = [CoreClock() for _ in range(self.n_cores)]
+            if cfg.shared_ring:
+                # the anti-pattern: ONE ring for all cores — default
+                # task-work mode (completions IPI the submitter, no
+                # DEFER_TASKRUN) and a contended SQ lock; the scheduler
+                # re-points ring.core at each resumed fiber's core
+                self.rings = [IoUring(self.tl, sq_depth=512,
+                                      setup=SetupFlags.NONE,
+                                      core=self.cores[0], contended=True)]
+            else:
+                # the paper's recommendation: ring-per-core, each
+                # SINGLE_ISSUER + DEFER_TASKRUN on its own CoreClock
+                self.rings = [IoUring(self.tl, sq_depth=512, setup=setup,
+                                      core=c) for c in self.cores]
+            self.ring = self.rings[0]
 
         # data: n_tuples of (int64 key, value_size bytes)
         keys = np.arange(n_tuples, dtype=np.int64)
@@ -200,20 +273,34 @@ class StorageEngine:
                        spec=spec,
                        filesystem=not cfg.passthrough)
         self.disk = disk
-        self.ring.register_device(DATA_FD, disk)
+        for r in self.rings:
+            r.register_device(DATA_FD, disk)
         root, next_pid = bulk_load(disk.image, keys, vals,
                                    page_size=cfg.page_size,
                                    value_size=cfg.value_size)
         self.n_pages = next_pid
-        self.pool = BufferPool(self.ring, PoolConfig(
+        pcfg = PoolConfig(
             n_frames=cfg.pool_frames, page_size=cfg.page_size,
             batch_evict=cfg.batch_evict, evict_batch=cfg.evict_batch,
             fixed_bufs=cfg.fixed_bufs, passthrough=cfg.passthrough,
-            fd=DATA_FD))
+            fd=DATA_FD)
+        if not self.mc:
+            self.pool = BufferPool(self.ring, pcfg)
+        else:
+            self.pool = PartitionedBufferPool(
+                pcfg, n_parts=self.n_cores, tl=self.tl, cores=self.cores)
         self.tree = BTree(self.pool, root, next_pid,
                           value_size=cfg.value_size)
-        policy = AdaptiveBatcher() if cfg.adaptive_batch else EagerSubmit()
-        self.sched = FiberScheduler(self.ring, policy=policy)
+        def _policy():
+            return AdaptiveBatcher() if cfg.adaptive_batch \
+                else EagerSubmit()
+        if not self.mc:
+            self.sched = FiberScheduler(self.ring, policy=_policy())
+        else:
+            self.sched = FiberScheduler(
+                rings=self.rings, cores=self.cores, policy=_policy(),
+                policies=[_policy() for _ in self.rings])
+            self.sched.on_resume = self._note_resume
         self.n_tuples = n_tuples
 
         # ---------------------------------------------- durability rung
@@ -229,22 +316,63 @@ class StorageEngine:
             self.log_disk = SimDisk(
                 self.tl, cfg.log_capacity, spec=spec,
                 filesystem=(mode != "passthru"))
-            self.ring.register_device(LOG_FD, self.log_disk)
+            for r in self.rings:
+                r.register_device(LOG_FD, self.log_disk)
+            # NB: the partitioned pool rounds the frame count down to a
+            # multiple of n_cores — the staging slots sit right after
+            # the ACTUAL frames in the registered-buffer table
             self.wal = WriteAheadLog(
                 self.ring, LOG_FD, self.log_disk, mode=mode,
-                buf_base=cfg.pool_frames if cfg.fixed_bufs else None,
+                buf_base=self.pool.cfg.n_frames if cfg.fixed_bufs
+                else None,
                 header=LogHeader(root=root, next_pid=next_pid,
                                  page_size=cfg.page_size,
                                  value_size=cfg.value_size,
                                  data_capacity=len(disk.image)))
             if cfg.fixed_bufs:
                 # one registered-buffer table: pool frames first, then
-                # the WAL's 4 KiB-aligned staging slots
-                self.ring.register_buffers(self.pool.frames +
-                                           self.wal.staging)
+                # the WAL's 4 KiB-aligned staging slots — identical on
+                # every ring, so a fixed-buffer SQE resolves the same
+                # slot no matter which core issues it
+                for r in self.rings:
+                    r.register_buffers(self.pool.frames +
+                                       self.wal.staging)
             self.pool.wal = self.wal
             if cfg.durability in ("group", "passthru-flush"):
-                self.gc = GroupCommit(self.wal, mode=mode)
+                policy = AdaptiveFlush() if cfg.adaptive_commit else None
+                signals = (lambda: (self.sched.inflight,
+                                    self.sched.ready_count())) \
+                    if policy is not None else None
+                if self.mc:
+                    self.gc = MultiCoreGroupCommit(
+                        self.wal, n_cores=self.n_cores, sched=self.sched,
+                        mode=mode, policy=policy, signals=signals)
+                else:
+                    self.gc = GroupCommit(self.wal, mode=mode,
+                                          policy=policy, signals=signals)
+        elif self.mc and cfg.fixed_bufs:
+            # non-durable multi-core with registered buffers: the pool's
+            # partitions skipped self-registration (ring=None)
+            for r in self.rings:
+                r.register_buffers(self.pool.frames)
+
+    # ------------------------------------------------------ multi-core
+
+    def _note_resume(self, fiber) -> None:
+        """Scheduler hook: remember which core the running fiber is
+        pinned to, for CPU charges (``charge``) and the partitioned
+        pool's latch model."""
+        self._cur_core = fiber.core
+        self.pool.cur_core = fiber.core
+
+    def charge(self, seconds: float) -> None:
+        """Charge transaction-logic CPU to the calling fiber's core —
+        the multi-core analogue of advancing the global clock (which is
+        exactly what it degenerates to on one core)."""
+        if self.mc:
+            self.cores[self._cur_core].charge(self.tl.now, seconds)
+        else:
+            self.tl.run_until(self.tl.now + seconds)
 
     # ------------------------------------------------------ transactions
 
@@ -266,7 +394,9 @@ class StorageEngine:
         wal.append(encode_record(RecordType.COMMIT, txn.id))
         end = wal.end_lsn
         if self.gc is not None:
-            yield from self.gc.commit(end)
+            # multi-core: enqueue on the calling core's commit queue
+            # (the arg evaluates synchronously, before the first yield)
+            yield from self.gc.commit(end, core=self._cur_core)
         else:                                   # +WAL: per-txn write+fsync
             yield from wal.flush_solo()
             wal.stats.groups.append(1)
@@ -337,8 +467,15 @@ class StorageEngine:
             if n == 0:
                 break
         dpt = self.pool.dirty_page_table()
+        # txn-table snapshot: committed txns already fully applied —
+        # their records may fall below a later truncation horizon, and
+        # recovery must still count them as winners (ROADMAP: this is
+        # what lets truncate_wal default on)
+        applied = [t for t in self.committed
+                   if t not in self._active_begin]
         ckpt_lsn = wal.append(encode_checkpoint(self.tree.root,
-                                                self.tree.next_pid, dpt))
+                                                self.tree.next_pid, dpt,
+                                                committed=applied))
         yield from wal.flush_to(wal.end_lsn)
         self.checkpoints += 1
         if self.cfg.truncate_wal:
@@ -363,7 +500,8 @@ class StorageEngine:
         return bytes(self.disk.image), bytes(self.log_disk.image)
 
     def run_fibers(self, make_txn, n_txns: int) -> dict:
-        """Run n_txns transactions across cfg.n_fibers worker fibers.
+        """Run n_txns transactions across cfg.n_fibers worker fibers
+        (round-robin over the cores in multi-core mode).
         ``make_txn(rng)`` returns a fiber generator for one transaction."""
         rng = np.random.default_rng(1234)
         counter = {"done": 0}
@@ -374,15 +512,39 @@ class StorageEngine:
                 yield from make_txn(rng)
 
         t0 = self.tl.now
-        for _ in range(self.cfg.n_fibers):
-            self.sched.spawn(worker())
+        workers = []
+        for i in range(self.cfg.n_fibers):
+            if self.mc:
+                c = i % self.n_cores
+                workers.append(self.sched.spawn(
+                    worker(), core=c,
+                    ring=0 if self.cfg.shared_ring else c))
+            else:
+                workers.append(self.sched.spawn(worker()))
+        done = lambda: counter["done"] >= n_txns          # noqa: E731
         if self.wal is not None and self.cfg.ckpt_every > 0:
             self.sched.spawn(self._checkpointer(counter, n_txns))
         if self.wal is not None:
-            self.sched.spawn(self.page_cleaner(
-                stop=lambda: counter["done"] >= n_txns))
+            if self.mc:
+                # one background writer per core, cleaning its own pool
+                # partition on its own ring
+                for c in range(self.n_cores):
+                    self.sched.spawn(
+                        self.page_cleaner_part(c, stop=done), core=c,
+                        ring=0 if self.cfg.shared_ring else c)
+            else:
+                self.sched.spawn(self.page_cleaner(stop=done))
+        if isinstance(self.gc, MultiCoreGroupCommit):
+            self.sched.spawn(self.gc.leader(
+                stop=lambda: self.gc.pending == 0 and
+                all(f.done for f in workers)), core=0, ring=0)
         self.sched.run()
-        dt = self.tl.now - t0
+        # multi-core: the run ends when the last core drains, which may
+        # be past the last timeline event
+        end = self.tl.now if not self.mc else \
+            max([self.tl.now] + [c.free for c in self.cores])
+        dt = end - t0
+        rs = self._ring_totals()
         out = {
             "config": self.cfg.name,
             "txns": counter["done"],
@@ -391,13 +553,20 @@ class StorageEngine:
             "faults": self.pool.faults,
             "hits": self.pool.hits,
             "writebacks": self.pool.writebacks,
-            "enters": self.ring.stats.enters,
-            "batch_eff": self.ring.stats.batch_efficiency(),
-            "worker_fallbacks": self.ring.stats.worker_fallbacks,
-            "bounce_mb": self.ring.stats.bounce_bytes_copied / 1e6,
-            "app_cpu_s": self.ring.stats.cpu_seconds_app,
-            "sqpoll_cpu_s": self.ring.stats.cpu_seconds_sqpoll,
+            "enters": rs["enters"],
+            "batch_eff": rs["sqes"] / max(1, rs["enters"]),
+            "worker_fallbacks": rs["worker_fallbacks"],
+            "bounce_mb": rs["bounce_bytes"] / 1e6,
+            "app_cpu_s": rs["cpu_app"],
+            "sqpoll_cpu_s": rs["cpu_sqpoll"],
         }
+        if self.mc:
+            out.update({
+                "cores": self.n_cores,
+                "shared_ring": self.cfg.shared_ring,
+                "latch_cross": self.pool.latch_cross,
+                "latch_local": self.pool.latch_local,
+            })
         if self.wal is not None:
             ws = self.wal.stats
             out.update({
@@ -415,6 +584,21 @@ class StorageEngine:
                                 self.wal.truncated_lsn) / 1e6,
             })
         return out
+
+    def _ring_totals(self) -> dict:
+        """Ring stats summed over all rings (one ring on one core is
+        just the identity)."""
+        return {
+            "enters": sum(r.stats.enters for r in self.rings),
+            "sqes": sum(r.stats.sqes_submitted for r in self.rings),
+            "worker_fallbacks": sum(r.stats.worker_fallbacks
+                                    for r in self.rings),
+            "bounce_bytes": sum(r.stats.bounce_bytes_copied
+                                for r in self.rings),
+            "cpu_app": sum(r.stats.cpu_seconds_app for r in self.rings),
+            "cpu_sqpoll": sum(r.stats.cpu_seconds_sqpoll
+                              for r in self.rings),
+        }
 
     def _checkpointer(self, counter, n_txns: int) -> Generator:
         last = 0
@@ -436,6 +620,20 @@ class StorageEngine:
         while stop is None or not stop():
             if len(pool.free) < low:
                 n = yield from pool.evict_some()
+                if n == 0:
+                    yield None
+            else:
+                yield None
+
+    def page_cleaner_part(self, part_idx: int, stop=None) -> Generator:
+        """Multi-core page cleaner: same policy as ``page_cleaner`` but
+        scoped to one pool partition, running on that partition's core
+        and issuing writebacks on that core's ring."""
+        part = self.pool.parts[part_idx]
+        low = max(2 * part.cfg.evict_batch, part.cfg.n_frames // 16)
+        while stop is None or not stop():
+            if len(part.free) < low:
+                n = yield from part.evict_some()
                 if n == 0:
                     yield None
             else:

@@ -25,7 +25,7 @@ def ycsb_update_txn(engine, rng):
     """100% uniform single-tuple updates (the paper's YCSB config)."""
     key = int(rng.integers(0, engine.n_tuples))
     val = bytes(engine.cfg.value_size)
-    engine.tl.run_until(engine.tl.now + C_TX_S)   # charge tx logic
+    engine.charge(C_TX_S)                # charge tx logic (per-core)
     t = engine.begin()
     ok = yield from t.update(key, val)
     assert ok, f"missing key {key}"
@@ -34,7 +34,7 @@ def ycsb_update_txn(engine, rng):
 
 def ycsb_read_txn(engine, rng):
     key = int(rng.integers(0, engine.n_tuples))
-    engine.tl.run_until(engine.tl.now + C_TX_S)
+    engine.charge(C_TX_S)
     v = yield from engine.tree.lookup(key)
     assert v is not None
 
@@ -74,7 +74,7 @@ class TPCCLite:
     def new_order(self, rng):
         e = self.e
         w = int(rng.integers(0, self.W))
-        e.tl.run_until(e.tl.now + 2 * C_TX_S)     # heavier logic than YCSB
+        e.charge(2 * C_TX_S)                      # heavier logic than YCSB
         t = e.begin()
         c = int(rng.integers(0, self.CUST_PER_WH))
         v = yield from t.lookup(self.key_cust(w, c))
@@ -90,7 +90,7 @@ class TPCCLite:
     def payment(self, rng):
         e = self.e
         w = int(rng.integers(0, self.W))
-        e.tl.run_until(e.tl.now + C_TX_S)
+        e.charge(C_TX_S)
         t = e.begin()
         c = int(rng.integers(0, self.CUST_PER_WH))
         val = bytes(e.cfg.value_size)
@@ -101,7 +101,7 @@ class TPCCLite:
     def order_status(self, rng):
         e = self.e
         w = int(rng.integers(0, self.W))
-        e.tl.run_until(e.tl.now + C_TX_S)
+        e.charge(C_TX_S)
         c = int(rng.integers(0, self.CUST_PER_WH))
         yield from e.tree.lookup(self.key_cust(w, c))
         # last order of this customer (best-effort point lookup)
@@ -110,7 +110,7 @@ class TPCCLite:
 
     def delivery(self, rng):
         e = self.e
-        e.tl.run_until(e.tl.now + 2 * C_TX_S)
+        e.charge(2 * C_TX_S)
         t = e.begin()
         val = bytes(e.cfg.value_size)
         base = e.n_tuples + 1_000_000
@@ -123,7 +123,7 @@ class TPCCLite:
     def stock_level(self, rng):
         e = self.e
         w = int(rng.integers(0, self.W))
-        e.tl.run_until(e.tl.now + C_TX_S)
+        e.charge(C_TX_S)
         i0 = int(rng.integers(0, self.ITEMS_PER_WH - 20))
         for i in range(i0, i0 + 20):       # scan 20 recent items' stock
             yield from e.tree.lookup(self.key_stock(w, i))

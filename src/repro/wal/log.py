@@ -150,21 +150,51 @@ def decode_apply(payload: bytes):
     return root, next_pid, entries
 
 
-def encode_checkpoint(root: int, next_pid: int,
-                      dpt: Dict[int, int]) -> bytes:
+def _id_ranges(ids) -> List[Tuple[int, int]]:
+    """Compress a set of ints to sorted (start, count) runs — txn ids
+    are near-contiguous, so the txn-table snapshot stays tiny."""
+    out: List[Tuple[int, int]] = []
+    for t in sorted(ids):
+        if out and t == out[-1][0] + out[-1][1]:
+            out[-1] = (out[-1][0], out[-1][1] + 1)
+        else:
+            out.append((t, 1))
+    return out
+
+
+def encode_checkpoint(root: int, next_pid: int, dpt: Dict[int, int],
+                      committed=()) -> bytes:
+    """``committed``: the txn-table snapshot — ids of txns that are
+    durable-committed AND fully applied at checkpoint time.  Their
+    BEGIN/intent/COMMIT records may fall below a later truncation
+    horizon; the snapshot keeps them in recovery's winner set."""
     out = [struct.pack("<QQH", root, next_pid, len(dpt))]
     for pid, rec_lsn in sorted(dpt.items()):
         out.append(struct.pack("<QQ", pid, rec_lsn))
+    ranges = _id_ranges(committed)
+    out.append(struct.pack("<I", len(ranges)))
+    for start, count in ranges:
+        out.append(struct.pack("<QI", start, count))
     return encode_record(RecordType.CHECKPOINT, 0, b"".join(out))
 
 
 def decode_checkpoint(payload: bytes):
+    """Returns (root, next_pid, dpt, committed-txn snapshot)."""
     root, next_pid, n = struct.unpack_from("<QQH", payload)
     dpt = {}
     for i in range(n):
         pid, rec_lsn = struct.unpack_from("<QQ", payload, 18 + 16 * i)
         dpt[pid] = rec_lsn
-    return root, next_pid, dpt
+    off = 18 + 16 * n
+    committed: set = set()
+    if off + 4 <= len(payload):          # pre-snapshot records: empty
+        (n_ranges,) = struct.unpack_from("<I", payload, off)
+        off += 4
+        for _ in range(n_ranges):
+            start, count = struct.unpack_from("<QI", payload, off)
+            off += 12
+            committed.update(range(start, start + count))
+    return root, next_pid, dpt, committed
 
 
 @dataclass

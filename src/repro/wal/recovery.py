@@ -141,8 +141,14 @@ def recover(data_image: bytes, log_image: bytes, *,
                          truncated_lsn=hdr.truncated_lsn)
     if ckpt is not None:
         rep.checkpoint_lsn = ckpt.lsn
-        _, _, dpt = decode_checkpoint(ckpt.payload)
+        _, _, dpt, snapshot = decode_checkpoint(ckpt.payload)
         rep.dpt_size = len(dpt)
+        # txn-table snapshot: committed-and-applied txns whose records
+        # (BEGIN through COMMIT) may have been truncated away — they
+        # stay winners, and their page effects are already on disk or
+        # covered by surviving APPLY records, so logical redo skips them
+        rep.winners |= snapshot
+        apply_done |= snapshot
         # ARIES redo bound: every APPLY below the checkpoint's min
         # recLSN had all its page effects flushed before the checkpoint
         # (a page still carrying older unflushed changes would be in
@@ -160,7 +166,7 @@ def recover(data_image: bytes, log_image: bytes, *,
         # ---- pass 2: physiological page redo, LSN order
         for r in records:
             if r.type == RecordType.CHECKPOINT:
-                root, next_pid, _ = decode_checkpoint(r.payload)
+                root, next_pid, _, _ = decode_checkpoint(r.payload)
                 continue
             if r.type != RecordType.APPLY:
                 continue

@@ -152,10 +152,12 @@ def test_ladder_monotone():
     """The paper's Fig. 5 shape: each design rung >= the previous
     (small tolerance for simulator noise).  Durability rungs are
     excluded — paying for fsyncs is SUPPOSED to cost throughput
-    (their ordering is covered by tests/test_wal.py)."""
+    (their ordering is covered by tests/test_wal.py) — and so are the
+    multi-core rungs, whose scale-up/anti-pattern ordering is covered
+    by tests/test_multicore.py."""
     tps = []
     for cfg in EngineConfig.ladder():
-        if cfg.durability != "none":
+        if cfg.durability != "none" or cfg.n_cores > 1:
             continue
         cfg.pool_frames = 512
         eng = StorageEngine(cfg, n_tuples=50_000)

@@ -1,0 +1,103 @@
+"""Replication rungs (repro.replication): what each durability level
+costs, and what shipping itself costs on the wire.
+
+  repl/modes   commit latency + throughput across the ladder — local
+               +GroupCommit baseline, then +AsyncRepl (ship after local
+               flush), +SemiSync (commit gated on standby WAL-durable
+               ack) and +SyncRepl (gated on standby APPLIED ack).
+               Expected ordering: sync > semisync > async ≈ local in
+               commit latency; acks stay amortized (acks ≪ commits).
+
+  repl/zc      SEND_ZC vs copied-send ship cost at the paper's Fig. 16
+               crossover: large wire chunks (4 KiB > the 1 KiB zero-
+               copy threshold) win with SEND_ZC — less primary CPU and
+               no bounce traffic — while small chunks (512 B) lose to
+               the zc setup cost.  Same workload, only the ship path
+               changes.
+
+  repl/lag     replication lag vs load (async mode): mean/max apply
+               lag in bytes as concurrency grows — the window async
+               failover can lose, measured not assumed.
+"""
+
+from dataclasses import replace
+
+from benchmarks.common import emit, section
+from repro.core import NVMeSpec
+from repro.replication import ReplicatedCluster
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+
+LADDER = {c.name: c for c in EngineConfig.ladder()}
+
+
+def _cfg(name, **over):
+    # ladder() entries are shared config instances: deep-copy via
+    # dataclasses.replace before per-bench overrides (PR 4 aliasing fix)
+    return replace(LADDER[name], **over)
+
+
+def _cluster(name, *, n_fibers=64, n_tuples=20_000, frames=1024,
+             **cluster_kw):
+    cfg = _cfg(name, n_fibers=n_fibers, pool_frames=frames)
+    return ReplicatedCluster(cfg, n_tuples=n_tuples,
+                             spec=NVMeSpec(**ENTERPRISE), **cluster_kw)
+
+
+def run(n_txns: int = 512):
+    section("replication modes: commit latency / throughput (repl/modes)")
+    # local baseline: the same engine without a standby
+    cfg = _cfg("+GroupCommit", n_fibers=64, pool_frames=1024)
+    eng = StorageEngine(cfg, n_tuples=20_000, spec=NVMeSpec(**ENTERPRISE))
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng),
+                         n_txns)
+    emit("repl/modes/local/commit_us", round(res["commit_wait_us"], 1),
+         f"tps={res['tps']:.0f} fsyncs_per_txn={res['fsyncs_per_txn']:.3f}")
+    for name in ("+AsyncRepl", "+SemiSync", "+SyncRepl"):
+        cl = _cluster(name)
+        e = cl.primary
+        res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng), n_txns)
+        emit(f"repl/modes/{name}/commit_us",
+             round(res["commit_wait_us"], 1),
+             f"tps_acked={res['tps_acked']:.0f} acks={res['acks']} "
+             f"acks_per_txn={res['acks'] / max(1, res['commits']):.3f} "
+             f"ship_mb={res['ship_mb']:.2f} "
+             f"apply_lag_b={res['standby_apply_lag_b']}")
+
+    section("SEND_ZC vs copied ship (Fig. 16 crossover) (repl/zc)")
+    # fat records -> fat flush spans, so the ship path dominates the
+    # wire and the zc-vs-copy delta is visible above the noise
+    for chunk, label in ((4096, "above_1k"), (512, "below_1k")):
+        row = {}
+        for zc, zlabel in (("on", "zc"), ("off", "copy")):
+            cfg = _cfg("+AsyncRepl", n_fibers=64, pool_frames=1024,
+                       value_size=1000)
+            cl = ReplicatedCluster(cfg, n_tuples=20_000,
+                                   spec=NVMeSpec(**ENTERPRISE),
+                                   chunk_bytes=chunk, zc_ship=zc)
+            e = cl.primary
+            res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng),
+                         n_txns)
+            row[zlabel] = res
+            emit(f"repl/zc/{label}/chunk={chunk}/{zlabel}/cpu_s",
+                 round(res["app_cpu_s"], 6),
+                 f"bounce_mb={res['bounce_mb']:.2f} "
+                 f"zc_chunks={res['ship_zc_chunks']}/{res['ship_chunks']} "
+                 f"commit_us={res['commit_wait_us']:.0f}")
+        win = (row["copy"]["app_cpu_s"] - row["zc"]["app_cpu_s"]) \
+            / max(row["copy"]["app_cpu_s"], 1e-12)
+        emit(f"repl/zc/{label}/zc_cpu_win_pct", round(win * 100, 2),
+             "positive = SEND_ZC cheaper")
+
+    section("replication lag vs load, async shipping (repl/lag)")
+    for n_fibers in (8, 32, 128):
+        cl = _cluster("+AsyncRepl", n_fibers=n_fibers)
+        e = cl.primary
+        res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng), n_txns)
+        emit(f"repl/lag/fibers={n_fibers}/mean_apply_lag_b",
+             round(res["mean_apply_lag_b"], 1),
+             f"max_durable_lag_b={res['max_durable_lag_b']} "
+             f"tps_acked={res['tps_acked']:.0f} "
+             f"standby_cpu_s={res['standby_cpu_s']:.4f}")

@@ -98,3 +98,20 @@ def run(total=192 * MiB, smoke=False):
              f"engine={e['egress_gib_per_node']:.2f} "
              f"oracle={o['egress_gib_per_node']:.2f} "
              f"syscalls={e['syscalls']}")
+
+    # the known oracle blind spot (ROADMAP): extreme fan-in at 6 nodes x
+    # 32 workers with probe-bound tuples — the closed form misses the
+    # receive-side queueing feedback that builds once flows are long,
+    # and overestimates egress by ~25-35%.  Emitted into the --json
+    # snapshot so the gap is tracked per PR; the [0.68, 0.82] band is
+    # pinned in tests/test_shuffle.py to catch regressions either way.
+    if not smoke:
+        kw = dict(tuple_size=512, n_nodes=6, n_workers=32,
+                  total_bytes_per_node=48 * MiB)
+        e = ShuffleEngine(ShuffleConfig(**kw)).run()
+        o = ShuffleSim(ShuffleConfig(**kw)).run()
+        ratio = e["egress_gib_per_node"] / o["egress_gib_per_node"]
+        emit("xval/6x32/tuple=512/engine_over_oracle", round(ratio, 3),
+             f"engine={e['egress_gib_per_node']:.2f} "
+             f"oracle={o['egress_gib_per_node']:.2f} "
+             f"rx_gap_pct={round((1 - ratio) * 100, 1)}")

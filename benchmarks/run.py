@@ -30,6 +30,7 @@ MODULES = [
     ("fig8", "benchmarks.bench_blocksize"),
     ("fig9", "benchmarks.bench_durable"),
     ("fig9wal", "benchmarks.bench_wal"),
+    ("repl", "benchmarks.bench_replication"),
     ("fig11-14", "benchmarks.bench_shuffle"),
     ("fig15-16", "benchmarks.bench_sendrecv"),
     ("fig17", "benchmarks.bench_guidelines"),
@@ -43,6 +44,7 @@ SMOKE_KW = {
     "fig6": {"n_txns": 60, "core_counts": (1, 2)},
     "fig7": {"n_txns": 120, "core_counts": (1, 2)},
     "fig9wal": {"n_txns": 96},
+    "repl": {"n_txns": 96},
     "fig11-14": {"smoke": True},
     "fig17": {"n_txns": 120},
 }

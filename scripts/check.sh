@@ -4,9 +4,33 @@
 #   2. a fast-mode benchmark smoke (tiny sizes) so bench modules can't
 #      silently rot — every paper-figure module must import and run,
 #      and the machine-readable snapshot path (--json) is exercised too
+#   3. a section-key diff of the smoke snapshot against the committed
+#      per-PR snapshot: every bench section present in the committed
+#      BENCH_pr*.json must still be emitted by the smoke run, so a
+#      silently dropped/renamed section fails fast
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python -m benchmarks.run --smoke --json BENCH_smoke.json
+python - <<'EOF'
+import glob
+import json
+import re
+
+snapshots = sorted(glob.glob("BENCH_pr*.json"),
+                   key=lambda p: int(re.search(r"\d+", p).group()))
+assert snapshots, "no committed BENCH_pr*.json snapshot found"
+ref = snapshots[-1]                     # newest committed snapshot
+want = {r["name"].split("/")[0]
+        for r in json.load(open(ref))["rows"]}
+have = {r["name"].split("/")[0]
+        for r in json.load(open("BENCH_smoke.json"))["rows"]}
+missing = want - have
+assert not missing, \
+    f"bench sections in {ref} missing from the smoke run: " \
+    f"{sorted(missing)}"
+print(f"# bench section keys OK: smoke covers all "
+      f"{len(want)} sections of {ref}")
+EOF

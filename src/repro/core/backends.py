@@ -189,7 +189,16 @@ class SimNetwork:
 
 
 class SimSocket:
-    """One endpoint of a connected pair over a SimNetwork."""
+    """One endpoint of a connected pair over a SimNetwork.
+
+    The timing plane moves message *sizes* (``rx_queue``); an optional
+    data plane carries the actual payload bytes alongside (``rx_data``),
+    so protocols that must reconstruct state at the receiver — WAL log
+    shipping, replication acks — move real bytes while sharing the link
+    model with size-only users (the shuffle sends no payloads and pays
+    nothing).  Payload content is captured at submission time; the
+    zero-copy no-reuse-before-ZC_NOTIF discipline is the sender's
+    responsibility, exactly as on a real NIC."""
 
     kind = "socket"
 
@@ -199,7 +208,9 @@ class SimSocket:
         self.peer_node = peer_node
         self.peer: Optional["SimSocket"] = None
         self.rx_queue: list = []          # nbytes per delivered message
+        self.rx_data: list = []           # parallel payloads (bytes|None)
         self.rx_waiters: list = []
+        self.last_payload: Optional[bytes] = None   # of last try_recv()
 
     @staticmethod
     def pair(net: SimNetwork, a: int, b: int):
@@ -207,8 +218,8 @@ class SimSocket:
         sa.peer, sb.peer = sb, sa
         return sa, sb
 
-    def service_send(self, nbytes: int,
-                     t_start: Optional[float] = None) -> Tuple[float, float]:
+    def service_send(self, nbytes: int, t_start: Optional[float] = None,
+                     payload: Optional[bytes] = None) -> Tuple[float, float]:
         """Pace the transfer from ``t_start`` (default: now) and schedule
         delivery at the peer; returns absolute ``(t_tx_done, t_arrive)``.
         ``t_tx_done`` is when the NIC has drained the send buffer — the
@@ -221,6 +232,7 @@ class SimSocket:
 
         def deliver():
             peer.rx_queue.append(nbytes)
+            peer.rx_data.append(payload)
             for w in peer.rx_waiters[:]:
                 w()
         self.net.tl.at(arrive, deliver)
@@ -228,8 +240,16 @@ class SimSocket:
 
     def try_recv(self) -> Optional[int]:
         if self.rx_queue:
+            self.last_payload = self.rx_data.pop(0)
             return self.rx_queue.pop(0)
         return None
+
+    def unrecv(self, nbytes: int) -> None:
+        """Put the message just popped by ``try_recv`` back at the head
+        of the queue (buffer-ring exhaustion: the recv terminates with
+        EAGAIN and the message must not be lost)."""
+        self.rx_queue.insert(0, nbytes)
+        self.rx_data.insert(0, self.last_payload)
 
 
 # ---------------------------------------------------------------------------

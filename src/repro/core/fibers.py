@@ -188,6 +188,26 @@ class FiberScheduler:
         self.ready.append((f, None))
         return f
 
+    def attach_ring(self, ring: IoUring, *,
+                    core: Optional[CoreClock] = None,
+                    policy: Optional[SubmitPolicy] = None) -> int:
+        """Adopt another node's ring into this scheduler (replication:
+        the standby's ring joins the primary's scheduler so one
+        deterministic event loop drives both ends of the wire).
+        Returns the ring index to ``spawn`` fibers on.  In multi-core
+        mode a ``core`` is required and the returned index is also the
+        fiber's core index; in single-core mode the ring's own
+        ``CoreClock`` (if any) merely accumulates that node's CPU."""
+        self.rings.append(ring)
+        self._ring_queued.append(0)
+        if self.mc:
+            assert core is not None, "multi-core attach needs a CoreClock"
+            self.cores.append(core)
+            self._core_ready.append(deque())
+            if self.policies is not None:
+                self.policies.append(policy or AdaptiveBatcher())
+        return len(self.rings) - 1
+
     def ready_count(self) -> int:
         """Runnable fibers (staged per-core FIFOs included)."""
         n = len(self.ready)
@@ -219,9 +239,14 @@ class FiberScheduler:
             # on the timeline instead of burning the ready queue.
             if self._spins > len(self.ready) + 1 and self.inflight:
                 self._flush()              # may drain everything
-                if not self.ring.cq and self.inflight:
-                    cqe = self.ring.wait_cqe()
-                    self._dispatch(cqe)
+                if not any(r.cq for r in self.rings) and self.inflight:
+                    # with attached rings an empty timeline is not a
+                    # deadlock here — armed multishot streams keep
+                    # ``inflight`` high while a runnable fiber (a flush
+                    # leader holding its CQEs) is what will progress;
+                    # on the historical 1-ring path it IS one, so keep
+                    # raising there rather than spinning silently
+                    self._wait_dispatch(require=len(self.rings) == 1)
                 self._spins = 0
             fiber, send_val = self.ready.popleft()
             before = len(self.ready)
@@ -240,8 +265,7 @@ class FiberScheduler:
         if self._queued:
             self._flush()
         if self.inflight:
-            cqe = self.ring.wait_cqe()
-            self._dispatch(cqe)
+            self._wait_dispatch()
 
     # -------------------------------------------------- multi-core step
 
@@ -427,8 +451,35 @@ class FiberScheduler:
     # ------------------------------------------------------- flushing
 
     def _flush(self) -> None:
-        self._flush_ring(0)           # single-core mode lives on ring 0
-        self._drain_some()
+        if len(self.rings) == 1:      # single-core mode lives on ring 0
+            self._flush_ring(0)
+            self._drain_some()
+        else:                         # attached rings (replication):
+            self._flush_all()         # flush + reap every node's ring
+            self._drain_all()
+
+    def _wait_dispatch(self, *, require: bool = True) -> None:
+        """Block until a completion arrives on ANY ring; dispatch it.
+        With one ring this is exactly ``wait_cqe`` (the historical
+        single-core path); with attached rings the scheduler is the
+        wait side for all of them.  ``require=False``: an exhausted
+        timeline is acceptable (the caller has runnable fibers)."""
+        if len(self.rings) == 1 and require:
+            self._dispatch(self.ring.wait_cqe())
+            return
+        tl = self.ring.tl
+        while True:
+            for ring in self.rings:
+                ring._run_task_work()
+                cqe = ring.peek_cqe()
+                if cqe is not None:
+                    self._dispatch(cqe)
+                    return
+            if not tl.run_next():
+                if require:
+                    raise RuntimeError(
+                        "deadlock: fibers waiting with an empty timeline")
+                return
 
     def _flush_ring(self, i: int) -> None:
         if self._ring_queued[i]:

@@ -369,7 +369,11 @@ class IoUring:
             self.stats.bounce_bytes_copied += sqe.length
         self._charge(cost, on_sqpoll)
         t_cpu = self._cpu_now()
-        tx_done, _ = sock.service_send(sqe.length, t_cpu)
+        # data plane: if the SQE carries a buffer, ship its first
+        # ``length`` bytes (captured at submission; see SimSocket)
+        payload = bytes(sqe.buf[:sqe.length]) if sqe.buf is not None \
+            else None
+        tx_done, _ = sock.service_send(sqe.length, t_cpu, payload=payload)
         if zc:
             # kernel >= 6.0 semantics: TWO CQEs per SEND_ZC.  The first
             # (res = length, MORE set) says the request completed; the
@@ -415,13 +419,14 @@ class IoUring:
             if bring is not None:
                 bid = bring.get()
                 if bid is None:
-                    sock.rx_queue.insert(0, got)
+                    sock.unrecv(got)
                     self.stats.buf_ring_exhausted += 1
                     self._complete(sqe, EAGAIN, CqeFlags.INLINE, then)
                     return
             if not (zc or fixed):
                 self._charge(c.copy_cycles(got), on_sqpoll)
                 self.stats.bounce_bytes_copied += got
+            self._deliver_payload(sqe, bring, bid, sock.last_payload)
             self._complete(sqe, got, CqeFlags.INLINE, then, buf_id=bid)
             return
 
@@ -436,7 +441,7 @@ class IoUring:
                     # buffer ring exhausted: leave the message queued and
                     # terminate the recv (multishot included) — EAGAIN,
                     # no MORE flag: the app recycles and re-arms
-                    sock.rx_queue.insert(0, g)
+                    sock.unrecv(g)
                     sock.rx_waiters.remove(on_ready)
                     self._ms_waiters.pop(sqe.user_data, None)
                     self.stats.buf_ring_exhausted += 1
@@ -446,6 +451,7 @@ class IoUring:
             if not (zc or fixed):                  # kernel->user copy
                 self._charge(c.copy_cycles(g), False)
                 self.stats.bounce_bytes_copied += g
+            self._deliver_payload(sqe, bring, bid, sock.last_payload)
             flags = CqeFlags.POLLED
             if multishot:
                 flags |= CqeFlags.MORE             # armed: one SQE, more CQEs
@@ -464,6 +470,17 @@ class IoUring:
             on_ready()
             if len(sock.rx_queue) == before:
                 break
+
+    def _deliver_payload(self, sqe: SQE, bring, bid: int, payload) -> None:
+        """Data plane of a recv: place the message's payload bytes (if
+        the sender attached any) where the app will look — the selected
+        provided-buffer-ring slot, or the SQE's own buffer."""
+        if payload is None:
+            return
+        if bring is not None and bid >= 0:
+            bring.buffers[bid][:len(payload)] = payload
+        elif sqe.buf is not None:
+            sqe.buf[:len(payload)] = payload
 
     # ----------------------------------------------------- file path
 
@@ -648,16 +665,21 @@ def prep_fsync(sqe, fd, user_data=0, flags=SqeFlags.NONE, nvme_flush=False):
 
 
 def prep_send(sqe, fd, length, user_data=0, flags=SqeFlags.NONE,
-              zero_copy=False, buf_index=-1):
-    s = _prep(sqe, Op.SEND_ZC if zero_copy else Op.SEND, fd, None, 0,
+              zero_copy=False, buf_index=-1, buf=None):
+    """``buf``: optional payload bytes to carry on the data plane (log
+    shipping); size-only senders (the shuffle) omit it."""
+    s = _prep(sqe, Op.SEND_ZC if zero_copy else Op.SEND, fd, buf, 0,
               length, user_data, flags)
     s.buf_index = buf_index
     return s
 
 
 def prep_recv(sqe, fd, length=0, user_data=0, flags=SqeFlags.NONE,
-              zero_copy=False, buf_index=-1, buf_group=-1):
-    s = _prep(sqe, Op.RECV_ZC if zero_copy else Op.RECV, fd, None, 0,
+              zero_copy=False, buf_index=-1, buf_group=-1, buf=None):
+    """``buf``: landing buffer for the message payload when no provided
+    buffer ring is used (with BUFFER_SELECT the payload lands in the
+    selected ring slot instead and ``CQE.buf_id`` names it)."""
+    s = _prep(sqe, Op.RECV_ZC if zero_copy else Op.RECV, fd, buf, 0,
               length, user_data, flags)
     s.buf_index = buf_index
     if buf_group >= 0:

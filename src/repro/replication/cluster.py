@@ -1,0 +1,216 @@
+"""Primary→standby wiring: one timeline, one scheduler, two nodes.
+
+``ReplicatedCluster`` builds the primary ``StorageEngine`` from an
+``EngineConfig`` whose ``repl`` field names the rung, then:
+
+* creates a 2-node ``SimNetwork`` with a ship socket (primary→standby
+  WAL stream) and an ack socket (standby→primary), registered as fds on
+  each node's own ring;
+* builds the ``StandbyNode`` (its ring joins the primary's scheduler via
+  ``FiberScheduler.attach_ring`` — storage and network I/O of BOTH nodes
+  run on one deterministic event loop, the paper's unified-interface
+  thesis end-to-end);
+* installs itself as ``engine.repl``: ``run_fibers`` spawns the
+  replication fibers next to the workers, and the commit path calls
+  ``wait_commit`` — which returns immediately (``async``), waits for the
+  standby's WAL-durable ack (``semisync``) or for the standby's applied
+  ack (``sync``).
+
+A plain ``StorageEngine`` (``repl="off"`` or built directly) never sees
+any of this — the single-node path is bit-for-bit unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core import NVMeSpec
+from repro.core.backends import NICSpec, SimNetwork, SimSocket
+from repro.core.fibers import Gate, IoRequest, StreamClose, StreamRead
+from repro.core.ring import prep_recv
+from repro.core.sqe import EAGAIN, CqeFlags, SqeFlags
+from repro.replication.frames import FrameAssembler, FrameKind
+from repro.replication.sender import LogSender
+from repro.replication.standby import StandbyNode
+from repro.storage.engine import (DATA_FD, LOG_FD, EngineConfig,
+                                  StorageEngine)
+
+SHIP_FD = 8          # primary -> standby WAL stream
+ACK_FD = 9           # standby -> primary acks
+ACK_BGID = 12        # provided buffer ring for ack recv on the primary
+
+MODES = ("async", "semisync", "sync")
+
+
+class ReplicatedCluster:
+    """One primary + one warm standby on a shared event loop."""
+
+    def __init__(self, cfg: EngineConfig, *, n_tuples: int = 200_000,
+                 spec: Optional[NVMeSpec] = None, seed: int = 0,
+                 nic: Optional[NICSpec] = None, chunk_bytes: int = 4096,
+                 rx_buffers: int = 64, zc_ship: str = "auto"):
+        assert cfg.repl in MODES, \
+            f"EngineConfig.repl must be one of {MODES}, got {cfg.repl!r}"
+        assert cfg.durability != "none", "log shipping needs a WAL rung"
+        self.cfg = cfg
+        self.mode = cfg.repl
+        self.primary = StorageEngine(cfg, n_tuples=n_tuples, spec=spec,
+                                     seed=seed)
+        p = self.primary
+        self.nic = nic or NICSpec()
+        self.net = SimNetwork(p.tl, 2, self.nic)
+        ship_p, ship_s = SimSocket.pair(self.net, 0, 1)
+        ack_s, ack_p = SimSocket.pair(self.net, 1, 0)
+        p.ring.register_device(SHIP_FD, ship_p)
+        p.ring.register_device(ACK_FD, ack_p)
+        self.standby = StandbyNode(p, ship_s, ack_s, data_fd=DATA_FD,
+                                   log_fd=LOG_FD, ship_fd=SHIP_FD,
+                                   ack_fd=ACK_FD, chunk_bytes=chunk_bytes,
+                                   rx_buffers=rx_buffers)
+        s = self.standby
+        if p.mc:
+            idx = p.sched.attach_ring(s.ring, core=s.core)
+            s.ring_idx, s.core_idx = idx, idx
+        else:
+            s.ring_idx = p.sched.attach_ring(s.ring)
+            s.core_idx = 0
+        self.sender = LogSender(
+            p, SHIP_FD, chunk_bytes=chunk_bytes, zc_ship=zc_ship,
+            zc_threshold=self.nic.zc_send_threshold)
+        self.ack_gate = Gate(p.sched)
+        self.acked_durable = 0
+        self.acked_applied = 0
+        self.acks = 0
+        self.fin = False
+        p.repl = self
+
+    # ------------------------------------------------- engine-side hooks
+
+    def ship_horizon(self) -> int:
+        """Replication-slot bound for WAL truncation: everything at or
+        above this LSN is still needed by the ship stream."""
+        return self.sender.shipped
+
+    def wait_commit(self, lsn: int):
+        """Fiber generator run inside ``StorageEngine.commit`` after
+        local durability: the replication rung's commit gate."""
+        if self.mode == "async":
+            return
+        while True:
+            have = self.acked_applied if self.mode == "sync" \
+                else self.acked_durable
+            if have >= lsn:
+                return
+            yield self.ack_gate
+
+    def spawn_fibers(self, workers) -> None:
+        """Called by ``run_fibers``: the replication fiber complement.
+        All primary-side fibers live on core 0 / ring 0 (SINGLE_ISSUER:
+        the sender shares the WAL leader's ring); the standby's live on
+        its own attached ring."""
+        p, s = self.primary, self.standby
+        stop = lambda: all(f.done for f in workers)       # noqa: E731
+        p.sched.spawn(self.sender.run(stop), core=0, ring=0)
+        p.sched.spawn(self._ack_receiver(), core=0, ring=0)
+        p.sched.spawn(self._watcher(stop), core=0, ring=0)
+        p.sched.spawn(s.receiver(), core=s.core_idx, ring=s.ring_idx)
+        p.sched.spawn(s.flusher(), core=s.core_idx, ring=s.ring_idx)
+        p.sched.spawn(s.applier(), core=s.core_idx, ring=s.ring_idx)
+
+    def _watcher(self, stop):
+        """Wakes the (gate-parked) sender when the workload quiesces —
+        the last flush hook may fire before the last worker is marked
+        done, so someone must deliver the shutdown edge."""
+        while not stop():
+            yield None
+        self.sender.gate.open()
+
+    def _ack_receiver(self):
+        """Multishot recv over the ack socket (provided buffer ring —
+        acks are tiny and batched by the standby per flush/apply)."""
+        ring = self.primary.ring
+        bring = ring.register_buf_ring(ACK_BGID, 32, 64)
+        asm = FrameAssembler()
+        ud = None
+        while not self.fin:
+            if ud is None:
+                def prep(sqe, _ud):
+                    prep_recv(sqe, ACK_FD, 0, buf_group=ACK_BGID,
+                              flags=(SqeFlags.MULTISHOT |
+                                     SqeFlags.POLL_FIRST))
+                ud = yield IoRequest(prep, multishot=True)
+            cqe = yield StreamRead(ud)
+            if cqe.res == EAGAIN and not (cqe.flags & CqeFlags.MORE):
+                ud = None
+                continue
+            assert cqe.res > 0, f"ack recv failed: {cqe.res}"
+            data = bytes(bring.buffers[cqe.buf_id][:cqe.res])
+            bring.recycle(cqe.buf_id)
+            for fr in asm.feed(data):
+                assert fr.kind == FrameKind.ACK
+                self.acked_durable = max(self.acked_durable, fr.lsn_lo)
+                self.acked_applied = max(self.acked_applied, fr.lsn_hi)
+                self.acks += 1
+                if fr.payload:                   # fin marker
+                    self.fin = True
+            self.ack_gate.open()
+            if not (cqe.flags & CqeFlags.MORE):
+                ud = None
+        if ud is not None:
+            yield StreamClose(ud)
+        self.ack_gate.open()
+
+    # ------------------------------------------------------------- runs
+
+    def run(self, make_txn, n_txns: int) -> Dict:
+        """The normal benchmark entry point: run the workload on the
+        primary; replication fibers ride along automatically."""
+        return self.primary.run_fibers(make_txn, n_txns)
+
+    def crash_run(self, fibers: List, *, steps: int) -> List:
+        """Spawn the given workload fiber generators plus the
+        replication complement, run the cluster for a bounded number of
+        scheduler decisions, then pull the plug mid-flight (frames may
+        be torn on the wire, spans half-flushed, applies half-done).
+        Returns the worker fibers for inspection."""
+        p = self.primary
+        workers = [p.sched.spawn(g) for g in fibers]
+        self.spawn_fibers(workers)
+        budget = {"left": steps}
+
+        def out_of_budget():
+            budget["left"] -= 1
+            return budget["left"] <= 0
+        p.sched.run(until=out_of_budget)
+        return workers
+
+    # ------------------------------------------------------------ stats
+
+    def result_rows(self) -> Dict:
+        p, s = self.primary, self.standby
+        lag_b = [b for _, b, _ in s.lag_samples]
+        alag_b = [b for _, _, b in s.lag_samples]
+        return {
+            "repl_mode": self.mode,
+            "acks": self.acks,
+            "ship_frames": self.sender.frames,
+            "ship_chunks": self.sender.chunks,
+            "ship_zc_chunks": self.sender.zc_chunks,
+            "ship_mb": self.sender.ship_bytes / 1e6,
+            "standby_commits": len(s.commits),
+            "standby_durable_lag_b": (p.wal.durable_lsn -
+                                      s.wal.durable_lsn),
+            "standby_apply_lag_b": p.wal.durable_lsn - s.applied_lsn,
+            "mean_apply_lag_b": (sum(alag_b) / len(alag_b)
+                                 if alag_b else 0.0),
+            "max_durable_lag_b": max(lag_b) if lag_b else 0,
+            "standby_cpu_s": s.ring.stats.cpu_seconds_app,
+        }
+
+
+def replicated_workload_state(cluster: ReplicatedCluster):
+    """Convenience for tests/benches: (committed txn ids in ack order,
+    primary last-writer map, standby last-writer map)."""
+    return (list(cluster.primary.committed),
+            dict(cluster.primary.last_writer),
+            dict(cluster.standby.last_writer))

@@ -114,6 +114,11 @@ class EngineConfig:
     # group-commit leader defers flushes on the inflight-vs-queued
     # signal (AdaptiveFlush) instead of flushing eagerly
     adaptive_commit: bool = False
+    # replication rung (repro.replication): off | async | semisync | sync.
+    # The config alone changes NOTHING — a plain StorageEngine stays
+    # bit-for-bit the single-node engine; ``ReplicatedCluster`` reads the
+    # mode, builds the standby, and installs the commit-gating hook.
+    repl: str = "off"
 
     @staticmethod
     def ladder():
@@ -154,6 +159,19 @@ class EngineConfig:
                          adaptive_batch=True, fixed_bufs=True,
                          passthrough=True, durability="passthru-flush",
                          **base),
+            # replicated durability rungs (repro.replication): log
+            # shipping over the ring on top of +GroupCommit.  async =
+            # ship after local flush; semisync = commit acked once the
+            # standby's WAL is durable; sync = once the standby APPLIED
+            EngineConfig("+AsyncRepl", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         durability="group", repl="async", **base),
+            EngineConfig("+SemiSync", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         durability="group", repl="semisync", **base),
+            EngineConfig("+SyncRepl", n_fibers=128, batch_evict=True,
+                         adaptive_batch=True, fixed_bufs=True,
+                         durability="group", repl="sync", **base),
             EngineConfig.multicore(4, shared_ring=True),
             EngineConfig.multicore(4),
         ]
@@ -301,6 +319,10 @@ class StorageEngine:
                 rings=self.rings, cores=self.cores, policy=_policy(),
                 policies=[_policy() for _ in self.rings])
             self.sched.on_resume = self._note_resume
+        # a ReplicatedCluster may attach the standby's ring/core to this
+        # scheduler; the engine's own accounting must not absorb them
+        self._own_rings = list(self.rings)
+        self._own_cores = list(self.cores) if self.cores else None
         self.n_tuples = n_tuples
 
         # ---------------------------------------------- durability rung
@@ -312,6 +334,18 @@ class StorageEngine:
         self.checkpoints = 0
         self._txn_ids = itertools.count(1)
         self._active_begin: Dict[int, int] = {}   # txn -> BEGIN lsn
+        # per-key write-order tracking (ROADMAP: first step toward
+        # OCC/latching): last COMMITTED writer per key and the commit
+        # LSN that installed it — _apply's write-rule guard keeps live
+        # state identical to a commit-order logical replay, and the
+        # replication standby's applier re-derives the same map
+        self.last_writer: Dict[int, int] = {}     # key -> txn id
+        self._key_seq: Dict[int, int] = {}        # key -> commit LSN
+        self.apply_skips = 0          # writes skipped by the write rule
+        self.t_last_commit = 0.0      # when the last commit was acked
+        # replication hook (repro.replication.ReplicatedCluster installs
+        # it); None = single-node, zero overhead on every path
+        self.repl = None
         if mode is not None:
             self.log_disk = SimDisk(
                 self.tl, cfg.log_capacity, spec=spec,
@@ -391,7 +425,7 @@ class StorageEngine:
         if not txn.writes:                      # read-only: nothing to do
             return
         t0 = self.tl.now
-        wal.append(encode_record(RecordType.COMMIT, txn.id))
+        clsn = wal.append(encode_record(RecordType.COMMIT, txn.id))
         end = wal.end_lsn
         if self.gc is not None:
             # multi-core: enqueue on the calling core's commit queue
@@ -400,10 +434,16 @@ class StorageEngine:
         else:                                   # +WAL: per-txn write+fsync
             yield from wal.flush_solo()
             wal.stats.groups.append(1)
+        if self.repl is not None:
+            # replicated rungs: the client ack additionally waits for
+            # the standby (semisync: WAL-durable there; sync: applied
+            # there; async: returns immediately)
+            yield from self.repl.wait_commit(end)
         wal.stats.commits += 1
         wal.stats.commit_wait_s += self.tl.now - t0
         self.committed.append(txn.id)           # durable: ack the commit
-        yield from self._apply(txn)
+        self.t_last_commit = self.tl.now
+        yield from self._apply(txn, clsn)
 
     def abort(self, txn: Txn) -> Generator:
         txn.done = True
@@ -414,14 +454,26 @@ class StorageEngine:
         return
         yield                                   # (keeps this a generator)
 
-    def _apply(self, txn: Txn) -> Generator:
+    def _apply(self, txn: Txn, clsn: int = 0) -> Generator:
         """Apply the committed write-set to the B-tree.  Each tree op
         emits one APPLY record — physiological deltas for in-place leaf
         upserts, full page images for split-touched pages — and stamps
         the touched pages' LSNs, all inside the op's no-yield window so
-        the snapshot is consistent."""
+        the snapshot is consistent.
+
+        ``clsn`` (the txn's COMMIT record LSN) orders concurrent
+        appliers per key: apply can suspend mid-write-set, so a
+        later-committed txn may reach a shared key first — the write
+        rule below skips the stale write instead of resurrecting it,
+        making live state provably equal to recovery's commit-order
+        logical replay (and to the replication standby's apply)."""
         wal, pool, tree = self.wal, self.pool, self.tree
         for key, value, rtype in txn.writes:
+            if self._key_seq.get(key, -1) > clsn:
+                self.apply_skips += 1           # a later committer won
+                continue
+            self._key_seq[key] = clsn
+            self.last_writer[key] = txn.id
             ops = []                            # per-call oplog: fibers
             if rtype == RecordType.INSERT:      # suspend mid-traversal
                 yield from tree.insert(key, value, oplog=ops)
@@ -486,6 +538,11 @@ class StorageEngine:
             # its BEGIN record.
             horizon = min([ckpt_lsn] + list(dpt.values()) +
                           list(self._active_begin.values()))
+            if self.repl is not None:
+                # replication slot semantics: log bytes the standby has
+                # not received yet must survive truncation — the sender
+                # slices wal.buf, and zeroed spans would ship as garbage
+                horizon = min(horizon, self.repl.ship_horizon())
             wal.header.root = self.tree.root
             wal.header.next_pid = self.tree.next_pid
             wal.truncate_to(horizon)
@@ -538,11 +595,15 @@ class StorageEngine:
             self.sched.spawn(self.gc.leader(
                 stop=lambda: self.gc.pending == 0 and
                 all(f.done for f in workers)), core=0, ring=0)
+        if self.repl is not None:
+            # replication fibers: primary log sender + ack receiver,
+            # standby receiver/flusher/applier (repro.replication)
+            self.repl.spawn_fibers(workers)
         self.sched.run()
         # multi-core: the run ends when the last core drains, which may
         # be past the last timeline event
         end = self.tl.now if not self.mc else \
-            max([self.tl.now] + [c.free for c in self.cores])
+            max([self.tl.now] + [c.free for c in self._own_cores])
         dt = end - t0
         rs = self._ring_totals()
         out = {
@@ -583,21 +644,31 @@ class StorageEngine:
                 "log_live_mb": (self.wal.end_lsn -
                                 self.wal.truncated_lsn) / 1e6,
             })
+        if self.repl is not None:
+            # with a standby attached, the run only quiesces once the
+            # SHUTDOWN/fin handshake drains — report client-visible
+            # throughput over the acked-commit horizon as well
+            dt_ack = self.t_last_commit - t0
+            out["tps_acked"] = counter["done"] / dt_ack if dt_ack > 0 \
+                else out["tps"]
+            out.update(self.repl.result_rows())
         return out
 
     def _ring_totals(self) -> dict:
-        """Ring stats summed over all rings (one ring on one core is
-        just the identity)."""
+        """Ring stats summed over the engine's OWN rings (one ring on
+        one core is just the identity; an attached standby ring reports
+        separately via the cluster)."""
+        rings = self._own_rings
         return {
-            "enters": sum(r.stats.enters for r in self.rings),
-            "sqes": sum(r.stats.sqes_submitted for r in self.rings),
+            "enters": sum(r.stats.enters for r in rings),
+            "sqes": sum(r.stats.sqes_submitted for r in rings),
             "worker_fallbacks": sum(r.stats.worker_fallbacks
-                                    for r in self.rings),
+                                    for r in rings),
             "bounce_bytes": sum(r.stats.bounce_bytes_copied
-                                for r in self.rings),
-            "cpu_app": sum(r.stats.cpu_seconds_app for r in self.rings),
+                                for r in rings),
+            "cpu_app": sum(r.stats.cpu_seconds_app for r in rings),
             "cpu_sqpoll": sum(r.stats.cpu_seconds_sqpoll
-                              for r in self.rings),
+                              for r in rings),
         }
 
     def _checkpointer(self, counter, n_txns: int) -> Generator:

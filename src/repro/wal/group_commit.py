@@ -49,11 +49,17 @@ MAX_DEFERS = 32
 class GroupCommit:
     def __init__(self, wal: WriteAheadLog, *, mode: Optional[str] = None,
                  policy: Optional[SubmitPolicy] = None,
-                 signals: Optional[Callable[[], Tuple[int, int]]] = None):
+                 signals: Optional[Callable[[], Tuple[int, int]]] = None,
+                 on_flush: Optional[Callable[[int, int], None]] = None):
         self.wal = wal
         self.mode = mode or wal.mode
         self.policy = policy              # None: flush eagerly (classic)
         self.signals = signals            # () -> (inflight, ready)
+        if on_flush is not None:
+            # log shipping taps the leader's flushed spans: every flush
+            # this coordinator (or anyone else) completes reports
+            # (prev_durable, new_durable) — see repro.replication
+            wal.on_flush.append(on_flush)
         self._leading = False
         self._defers = 0
         self._waiting: List[int] = []     # commit LSN ends, not yet durable
@@ -107,9 +113,12 @@ class MultiCoreGroupCommit:
     def __init__(self, wal: WriteAheadLog, *, n_cores: int,
                  sched: FiberScheduler, mode: Optional[str] = None,
                  policy: Optional[SubmitPolicy] = None,
-                 signals: Optional[Callable[[], Tuple[int, int]]] = None):
+                 signals: Optional[Callable[[], Tuple[int, int]]] = None,
+                 on_flush: Optional[Callable[[int, int], None]] = None):
         self.wal = wal
         self.mode = mode or wal.mode
+        if on_flush is not None:
+            wal.on_flush.append(on_flush)     # see GroupCommit
         self.policy = policy
         self.signals = signals
         self.queues: List[deque] = [deque() for _ in range(n_cores)]

@@ -28,7 +28,7 @@ from __future__ import annotations
 import struct
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.fibers import IoRequest
 from repro.core.ring import (prep_fsync, prep_write, prep_write_fixed)
@@ -292,6 +292,10 @@ class WriteAheadLog:
         self.truncated_lsn = BLOCK
         self._flushing = False
         self.stats = WalStats()
+        # flush hooks: called as cb(prev_durable, new_durable) after
+        # every flush that advances the durable horizon — the log-
+        # shipping sender taps these spans (repro.replication)
+        self.on_flush: List[Callable[[int, int], None]] = []
 
     # ------------------------------------------------------------ append
 
@@ -307,6 +311,26 @@ class WriteAheadLog:
         self.stats.records += 1
         self.stats.bytes_appended += len(record)
         return lsn
+
+    def append_raw(self, span: bytes, lsn: int) -> None:
+        """Adopt a shipped byte span of ANOTHER log (replication standby:
+        the primary's flushed records land here verbatim, so the two
+        logs stay byte-identical and LSNs line up).  ``lsn`` must be
+        this log's current ``end_lsn`` — spans arrive in order on one
+        stream; a gap means the shipping protocol broke."""
+        assert lsn == self.end_lsn, \
+            f"non-contiguous shipped span: have {self.end_lsn}, got {lsn}"
+        self.buf += span
+        self.stats.bytes_appended += len(span)
+
+    def adopt_header(self, hdr_block: bytes) -> None:
+        """Install a shipped bootstrap header block (replication HELLO):
+        overwrites this log's block 0 in buffer and on device so the
+        standby's image is self-describing with the PRIMARY's geometry."""
+        assert len(hdr_block) == BLOCK
+        self.header = read_header(hdr_block)
+        self.buf[:BLOCK] = hdr_block
+        self.disk.image[:BLOCK] = hdr_block
 
     # ------------------------------------------------------------- flush
 
@@ -373,7 +397,11 @@ class WriteAheadLog:
         else:
             self.stats.fsync_polled += 1
         self.flushed_lsn = max(self.flushed_lsn, target)
+        prev = self.durable_lsn
         self.durable_lsn = max(self.durable_lsn, target)
+        if self.durable_lsn > prev:
+            for cb in self.on_flush:
+                cb(prev, self.durable_lsn)
 
     def _write_reqs(self, lo: int, span: bytes, mode: str):
         reqs = []

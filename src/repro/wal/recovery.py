@@ -128,8 +128,16 @@ def analyze(records: List[LogRecord]):
 
 
 def recover(data_image: bytes, log_image: bytes, *,
-            pool_frames: int = 4096, spec: Optional[NVMeSpec] = None
+            pool_frames: int = 4096, spec: Optional[NVMeSpec] = None,
+            full_redo: bool = False
             ) -> Tuple[RecoveredEngine, RecoveryReport]:
+    """``full_redo``: ignore the checkpoint's redo bound and replay every
+    APPLY record from the log start.  A checkpoint's min-recLSN promise
+    ("effects below this are on disk") holds only for the device that
+    TOOK the checkpoint — a replication standby promoting over its own
+    base-backup image, or a point-in-time restore over an archived log,
+    must redo from the beginning (the page-LSN guard keeps it
+    idempotent).  See repro.replication."""
     hdr = read_header(log_image)
     records = scan_log(log_image)
     commit_lsn, losers, aborted, intents, apply_done, ckpt = \
@@ -153,7 +161,8 @@ def recover(data_image: bytes, log_image: bytes, *,
         # recLSN had all its page effects flushed before the checkpoint
         # (a page still carrying older unflushed changes would be in
         # the DPT with a recLSN at or below that record)
-        rep.redo_start = min(dpt.values()) if dpt else ckpt.lsn
+        if not full_redo:
+            rep.redo_start = min(dpt.values()) if dpt else ckpt.lsn
 
     eng = RecoveredEngine(data_image, page_size=hdr.page_size,
                           value_size=hdr.value_size, root=hdr.root,

@@ -1,0 +1,468 @@
+"""Ring-native WAL log shipping (repro.replication): frame reassembly
+and torn-stream rejection, the sync/semisync/async durability rungs,
+failover equality, point-in-time restore, SEND_ZC threshold choice,
+per-key write-order tracking, and the zero-overhead single-node guard.
+"""
+
+import struct
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import NVMeSpec
+from repro.replication import ReplicatedCluster
+from repro.replication.frames import (FrameAssembler, FrameKind, chop,
+                                      encode_frame)
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
+from repro.wal import recover, scan_log
+from repro.wal.log import RecordType
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+LADDER = {c.name: c for c in EngineConfig.ladder()}
+MODE_NAME = {"async": "+AsyncRepl", "semisync": "+SemiSync",
+             "sync": "+SyncRepl"}
+
+
+def make_cluster(mode, *, n_fibers=16, n_tuples=4_000, frames=256,
+                 **kw):
+    cfg = replace(LADDER[MODE_NAME[mode]], n_fibers=n_fibers,
+                  pool_frames=frames)
+    return ReplicatedCluster(cfg, n_tuples=n_tuples,
+                             spec=NVMeSpec(**ENTERPRISE), **kw)
+
+
+def crash_workload(eng, n_fibers, keys_per_fiber):
+    """Disjoint-slice writers stamping (txn_id, key) into values; the
+    same shape as test_wal's crash workload."""
+    acked, expect, staged = [], {}, {}
+
+    def fiber(fid):
+        rng = np.random.default_rng(1000 + fid)
+        lo = fid * keys_per_fiber
+        while True:
+            t = eng.begin()
+            key = lo + int(rng.integers(0, keys_per_fiber))
+            val = struct.pack("<qq", t.id, key)
+            val += bytes(eng.cfg.value_size - len(val))
+            yield from t.update(key, val)
+            staged[t.id] = [(key, val)]
+            yield from eng.commit(t)
+            acked.append(t.id)
+            expect[key] = val
+    return fiber, acked, expect, staged
+
+
+# ---------------------------------------------------------------------------
+# wire framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_across_chunk_boundaries():
+    """Frames chopped into chunks, fed in order with pathological chunk
+    sizes, reassemble exactly — including frames far larger than a
+    chunk and several frames packed into one chunk."""
+    rng = np.random.default_rng(7)
+    frames = []
+    stream = b""
+    for i in range(40):
+        payload = bytes(rng.integers(0, 256, int(rng.integers(0, 9000)),
+                                     dtype=np.uint8))
+        f = encode_frame(FrameKind.WAL_SPAN, i, i + len(payload), payload)
+        frames.append((i, payload))
+        stream += f
+    for chunk_bytes in (1, 7, 512, 4096, 1 << 20):
+        asm = FrameAssembler()
+        got = []
+        for c in chop(stream, chunk_bytes):
+            got.extend(asm.feed(c))
+        assert [(f.lsn_lo, f.payload) for f in got] == frames
+        assert asm.torn_bytes() == 0 and not asm.corrupt
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+def test_torn_stream_rejects_exactly_the_torn_suffix(seed):
+    """Property (satellite): cut the ship stream at ANY byte (the
+    primary died mid-send); every frame fully before the cut decodes,
+    the torn suffix is held back in its entirety, and nothing partial
+    leaks out."""
+    rng = np.random.default_rng(seed)
+    frames, stream, starts = [], b"", []
+    for i in range(20):
+        payload = bytes(rng.integers(0, 256, int(rng.integers(1, 3000)),
+                                     dtype=np.uint8))
+        f = encode_frame(FrameKind.WAL_SPAN, i, 0, payload)
+        starts.append(len(stream))
+        stream += f
+        frames.append(payload)
+    for cut in rng.integers(1, len(stream), size=20):
+        cut = int(cut)
+        asm = FrameAssembler()
+        got = []
+        for c in chop(stream[:cut], 333):
+            got.extend(asm.feed(c))
+        n_complete = sum(1 for j, s in enumerate(starts)
+                         if s + len(encode_frame(
+                             FrameKind.WAL_SPAN, j, 0, frames[j])) <= cut)
+        assert len(got) == n_complete
+        assert [f.payload for f in got] == frames[:n_complete]
+        assert asm.torn_bytes() == cut - (starts[n_complete]
+                                          if n_complete < len(starts)
+                                          else len(stream))
+
+
+def test_corrupt_chunk_poisons_the_stream_at_the_crc():
+    """A bit flip in transit: frames before the corrupted one decode,
+    the corrupted frame and everything after are rejected."""
+    payloads = [bytes([i] * 100) for i in range(10)]
+    stream = b"".join(encode_frame(FrameKind.WAL_SPAN, i, 0, p)
+                      for i, p in enumerate(payloads))
+    flip_at = 5 * len(encode_frame(FrameKind.WAL_SPAN, 0, 0,
+                                   payloads[0])) + 60
+    torn = bytearray(stream)
+    torn[flip_at] ^= 0x40
+    asm = FrameAssembler()
+    got = []
+    for c in chop(bytes(torn), 256):
+        got.extend(asm.feed(c))
+    assert [f.payload for f in got] == payloads[:5]
+    assert asm.corrupt
+    # and the stream stays dead: further feeds yield nothing
+    assert asm.feed(encode_frame(FrameKind.ACK, 1, 2)) == []
+
+
+# ---------------------------------------------------------------------------
+# the replication rungs, end to end
+# ---------------------------------------------------------------------------
+
+def test_commit_latency_ordering_sync_semisync_async():
+    """Acceptance: per-commit latency sync > semisync > async, with the
+    async rung within a whisker of the local +GroupCommit baseline, and
+    acks amortized (one per flush/apply batch, not per commit)."""
+    n = 128
+    lat = {}
+    for mode in ("async", "semisync", "sync"):
+        cl = make_cluster(mode, n_fibers=32, n_tuples=8_000, frames=512)
+        e = cl.primary
+        res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng), n)
+        assert res["commits"] == n
+        assert res["acks"] < n / 2, "acks are not batched"
+        assert res["standby_commits"] == n, "standby missed commits"
+        lat[mode] = res["commit_wait_us"]
+    assert lat["sync"] > lat["semisync"] > lat["async"], lat
+
+
+def test_clean_run_standby_equals_primary():
+    """After a quiesced run the standby is byte-identical on the log,
+    logically identical on promote, and its commit-order last-writer
+    map matches the primary's live one (satellite: write-order
+    tracking validates standby apply order)."""
+    cl = make_cluster("async", n_fibers=16, n_tuples=4_000, frames=256)
+    eng = cl.primary
+    expect = {}
+
+    def txn(rng):
+        t = eng.begin()
+        key = int(rng.integers(0, eng.n_tuples))
+        val = struct.pack("<qq", t.id, key)
+        val += bytes(eng.cfg.value_size - len(val))
+        yield from t.update(key, val)
+        yield from eng.commit(t)
+        expect[key] = val
+    cl.run(txn, 120)
+    # byte-identical logs up to the primary's durable horizon
+    p, s = eng.wal, cl.standby.wal
+    assert p.durable_lsn == s.durable_lsn == cl.sender.shipped
+    assert bytes(p.buf[:p.durable_lsn]) == bytes(s.buf[:s.durable_lsn])
+    # standby applied everything and re-derived the same write order
+    assert cl.standby.applied_lsn == p.durable_lsn
+    assert cl.standby.last_writer == eng.last_writer
+    assert set(cl.standby.commits) == set(eng.committed)
+    # logical equality on promote
+    rec, rep = cl.standby.promote(pool_frames=512)
+    assert set(eng.committed) <= rep.winners
+    got = rec.get_many(sorted(expect))
+    for k, v in expect.items():
+        assert got[k] == v, f"key {k} diverged on the standby"
+
+
+@pytest.mark.parametrize("mode,steps", [
+    ("sync", 1500), ("sync", 6000), ("semisync", 1500),
+    ("semisync", 6000), ("async", 1500), ("async", 6000),
+])
+def test_failover_after_arbitrary_crash(mode, steps):
+    """Acceptance: kill the whole cluster at an arbitrary point.
+    Promote the standby from its DURABLE state (power loss, the harshest
+    reading): sync/semisync may not lose one acked txn; async loss is
+    exactly the txns whose COMMIT lies beyond the standby's durable log
+    horizon (bounded by replication lag)."""
+    cl = make_cluster(mode)
+    eng = cl.primary
+    fiber, acked, expect, staged = crash_workload(eng, 16, 4_000 // 16)
+    cl.crash_run([fiber(i) for i in range(16)], steps=steps)
+    rec, rep = cl.standby.promote(durable_only=True, pool_frames=512)
+    missing = [t for t in acked if t not in rep.winners]
+    if mode in ("sync", "semisync"):
+        assert not missing, \
+            f"{mode}: acked txns lost on failover: {missing}"
+    else:
+        # bounded loss: everything below the standby's durable horizon
+        # survived; the lost tail is exactly the post-horizon commits
+        surviving = scan_log(cl.standby.log_image(durable_only=True))
+        horizon = surviving[-1].end if surviving else 4096
+        commit_end = {r.txn: r.end for r in scan_log(
+            bytes(eng.wal.buf)) if r.type == RecordType.COMMIT}
+        for t in missing:
+            assert commit_end[t] > horizon, \
+                f"async: txn {t} lost despite being shipped+durable"
+    # value-level check (allowance: an unacked-but-durable later winner
+    # may have overwritten, exactly as in test_wal's crash property)
+    got = rec.get_many(sorted(expect))
+    for key, val in expect.items():
+        v = got[key]
+        writer_acked = struct.unpack_from("<q", val)[0]
+        if v == val or writer_acked in missing:
+            continue
+        assert v is not None, f"key {key} vanished"
+        w = struct.unpack_from("<q", v)[0]
+        assert w in rep.winners and w > writer_acked and \
+            (key, v) in staged.get(w, []), \
+            f"{mode}: acked write to key {key} lost (found writer {w})"
+
+
+def test_torn_ship_after_crash_is_held_back():
+    """Kill the cluster mid-run, then simulate the extra bytes that
+    made it onto the wire before the lights went out: a partial frame
+    prefix must change NOTHING on the standby (no span adopted, torn
+    bytes quarantined in the assembler), and promotion lands on the
+    last fully-shipped state."""
+    cl = make_cluster("async")
+    eng = cl.primary
+    fiber, acked, expect, _ = crash_workload(eng, 16, 4_000 // 16)
+    cl.crash_run([fiber(i) for i in range(16)], steps=4000)
+    s = cl.standby
+    end_before = s.wal.end_lsn
+    torn_before = s.assembler.torn_bytes()
+    # the next span that WOULD have shipped, framed — but only a prefix
+    # of its bytes escapes onto the wire before the crash
+    lo = s.wal.end_lsn
+    span = bytes(eng.wal.buf[lo:]) or bytes(1500)
+    frame = encode_frame(FrameKind.WAL_SPAN, lo, lo + len(span), span)
+    prefix = frame[:len(frame) * 2 // 3]      # strictly incomplete
+    for c in chop(prefix, cl.sender.chunk_bytes):
+        for fr in s.assembler.feed(c):
+            s._handle(fr)
+    assert s.wal.end_lsn == end_before, "torn span leaked into the WAL"
+    assert s.assembler.torn_bytes() == torn_before + len(prefix)
+    rec, rep = s.promote(pool_frames=512)
+    # promotion is exactly the pre-tear state: every standby-durable
+    # commit is a winner, no partial-frame record ever surfaced
+    standby_commits = {r.txn for r in scan_log(s.log_image())
+                       if r.type == RecordType.COMMIT}
+    assert standby_commits <= rep.winners
+
+
+def test_corrupt_size_field_poisons_not_stalls():
+    """An upward bit flip in a frame header's SIZE field must mark the
+    stream corrupt at once — not leave the assembler 'waiting for the
+    tail' forever while sync-mode commits block on acks."""
+    stream = b"".join(encode_frame(FrameKind.WAL_SPAN, i, 0, bytes(50))
+                      for i in range(4))
+    torn = bytearray(stream)
+    # frame 2's size field (bytes [4:8] of the frame): blow it up
+    off = 2 * (25 + 50) + 4
+    torn[off + 3] = 0x7F
+    asm = FrameAssembler()
+    got = asm.feed(bytes(torn))
+    assert len(got) == 2
+    assert asm.corrupt, "oversized frame header must poison the stream"
+
+
+def test_truncation_never_outruns_the_ship_stream():
+    """Replication-slot semantics: checkpoint-driven WAL truncation on
+    a replicated primary must stop at the sender's shipped position —
+    zeroing unshipped bytes would ship garbage to the standby."""
+    cfg = replace(LADDER[MODE_NAME["async"]], n_fibers=16,
+                  pool_frames=256, ckpt_every=20)
+    cl = ReplicatedCluster(cfg, n_tuples=4_000,
+                           spec=NVMeSpec(**ENTERPRISE))
+    eng = cl.primary
+    res = cl.run(lambda rng, e=eng: ycsb_update_txn(e, rng), 200)
+    assert eng.checkpoints > 0
+    assert eng.wal.stats.truncations > 0, \
+        "no truncation happened — the test lost its teeth"
+    assert eng.wal.truncated_lsn <= cl.sender.shipped
+    assert res["standby_commits"] == 200
+    assert not cl.standby.assembler.corrupt
+    rec, rep = cl.standby.promote(pool_frames=512)
+    assert set(eng.committed) <= rep.winners
+
+
+def test_point_in_time_restore():
+    """PITR from base backup + shipped log: restoring to LSN L yields
+    exactly the txns whose COMMIT record ends at or below L."""
+    cl = make_cluster("async", n_fibers=8)
+    eng = cl.primary
+    staged = {}                        # txn -> (key, val)
+
+    def txn(rng):
+        t = eng.begin()
+        key = int(rng.integers(0, eng.n_tuples))
+        val = struct.pack("<qq", t.id, key)
+        val += bytes(eng.cfg.value_size - len(val))
+        yield from t.update(key, val)
+        yield from eng.commit(t)
+        staged[t.id] = (key, val)
+    cl.run(txn, 80)
+    recs = scan_log(cl.standby.log_image())
+    commits = [r for r in recs if r.type == RecordType.COMMIT]
+    assert len(commits) == 80
+    target = commits[len(commits) // 2]
+    rec, rep = cl.standby.point_in_time(target.end, pool_frames=512)
+    want_winners = {r.txn for r in commits if r.end <= target.end}
+    assert rep.winners == want_winners
+    # every key's restored value comes from its last sub-horizon writer
+    # in COMMIT-LSN order — the commit-order replay, replayed by hand
+    expected = {}
+    for r in sorted(commits, key=lambda r: r.lsn):
+        if r.end <= target.end:
+            key, val = staged[r.txn]
+            expected[key] = val
+    got = rec.get_many(sorted(expected))
+    for key, val in expected.items():
+        assert got[key] == val, f"key {key} wrong at PIT"
+
+
+def test_sender_zc_threshold_choice():
+    """Fig. 16 on the ship path: with 4 KiB wire chunks every full
+    chunk goes SEND_ZC and ship adds no bounce traffic; with 512 B
+    chunks (below the 1 KiB threshold) the sender stays on copied
+    sends."""
+    big = make_cluster("async", chunk_bytes=4096)
+    e = big.primary
+    res_big = big.run(lambda rng, en=e: ycsb_update_txn(en, rng), 64)
+    assert res_big["ship_zc_chunks"] > 0
+    assert big.standby.ring.stats.zc_notifs == 0   # notifs on primary
+    small = make_cluster("async", chunk_bytes=512)
+    e2 = small.primary
+    res_small = small.run(lambda rng, en=e2: ycsb_update_txn(en, rng), 64)
+    assert res_small["ship_zc_chunks"] == 0
+    # copied ship pays the bounce; zc ship doesn't
+    assert res_small["bounce_mb"] > res_big["bounce_mb"]
+
+
+def test_multicore_primary_replicates():
+    """The standby's ring attaches to a MULTI-core primary scheduler
+    (conservative PDES) just as well: cross-core group commit feeds the
+    sender, the standby keeps up, nothing is lost on failover."""
+    cfg = EngineConfig.multicore(2, durability="group", fixed_bufs=True,
+                                 repl="semisync", pool_frames=512,
+                                 n_fibers=32)
+    cl = ReplicatedCluster(cfg, n_tuples=8_000,
+                           spec=NVMeSpec(**ENTERPRISE))
+    eng = cl.primary
+    res = cl.run(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    assert res["commits"] == 96
+    rec, rep = cl.standby.promote(durable_only=True, pool_frames=512)
+    assert set(eng.committed) <= rep.winners
+
+
+# ---------------------------------------------------------------------------
+# per-key write-order tracking (satellite)
+# ---------------------------------------------------------------------------
+
+def test_last_writer_matches_commit_order_replay():
+    """The engine's live per-key last-writer map must equal the one a
+    commit-order logical replay of the log produces — the write rule in
+    ``_apply`` makes apply-order inversions invisible (ROADMAP's OCC
+    precursor), and recovery agrees."""
+    cfg = replace(LADDER["+GroupCommit"], n_fibers=32, pool_frames=256)
+    eng = StorageEngine(cfg, n_tuples=500,     # tiny key space: plenty
+                        spec=NVMeSpec(**ENTERPRISE))   # of conflicts
+    vals = {}
+
+    def txn(rng):
+        t = eng.begin()
+        key = int(rng.integers(0, eng.n_tuples))
+        val = struct.pack("<qq", t.id, key)
+        val += bytes(eng.cfg.value_size - len(val))
+        yield from t.update(key, val)
+        yield from eng.commit(t)
+        vals[key] = t.id
+    eng.run_fibers(txn, 400)
+    # commit-order replay from the log itself
+    recs = scan_log(bytes(eng.wal.buf))
+    commit_lsn = {r.txn: r.lsn for r in recs
+                  if r.type == RecordType.COMMIT}
+    replay = {}
+    from repro.wal.log import decode_kv
+    intents = {}
+    for r in recs:
+        if r.type in (RecordType.UPDATE, RecordType.INSERT):
+            key, _ = decode_kv(r.payload)
+            intents.setdefault(r.txn, []).append(key)
+    for t in sorted(commit_lsn, key=commit_lsn.get):
+        for key in intents.get(t, []):
+            replay[key] = t
+    assert replay == eng.last_writer
+    # and the recovered image agrees with the live one per key
+    data, log = eng.crash_images()
+    rec, rep = recover(data, log, pool_frames=512)
+    got = rec.get_many(sorted(eng.last_writer))
+    for key, writer in eng.last_writer.items():
+        assert struct.unpack_from("<q", got[key])[0] == writer, \
+            f"key {key}: recovered writer != live last-writer {writer}"
+
+
+# ---------------------------------------------------------------------------
+# config hygiene / single-node guard (satellite)
+# ---------------------------------------------------------------------------
+
+def test_repl_defaults_off_and_ladder_has_rungs():
+    assert EngineConfig().repl == "off"
+    names = [c.name for c in EngineConfig.ladder()]
+    for rung in ("+AsyncRepl", "+SemiSync", "+SyncRepl"):
+        assert rung in names
+    # ladder() returns fresh instances each call (aliasing hygiene):
+    a = {c.name: c for c in EngineConfig.ladder()}["+AsyncRepl"]
+    b = {c.name: c for c in EngineConfig.ladder()}["+AsyncRepl"]
+    assert a is not b
+    replace(a, pool_frames=1)          # replace() never mutates shared
+    assert b.pool_frames != 1
+
+
+def test_single_node_path_pays_zero_replication_overhead():
+    """A replication-capable config with ``repl='off'`` must be
+    bit-for-bit the plain +GroupCommit engine: identical virtual time,
+    identical ring traffic, no replication fibers, no hook."""
+    n = 96
+    base = replace(LADDER["+GroupCommit"], n_fibers=32, pool_frames=512)
+    offd = replace(LADDER["+AsyncRepl"], name="+GroupCommit",
+                   repl="off", n_fibers=32, pool_frames=512)
+    assert base == offd                # same dataclass -> same engine
+    res = {}
+    for tag, cfg in (("base", base), ("off", offd)):
+        eng = StorageEngine(cfg, n_tuples=8_000,
+                            spec=NVMeSpec(**ENTERPRISE))
+        assert eng.repl is None
+        res[tag] = eng.run_fibers(
+            lambda rng, e=eng: ycsb_update_txn(e, rng), n)
+    assert res["base"] == res["off"], "repl='off' perturbed the engine"
+
+
+def test_wal_flush_hook_reports_contiguous_spans():
+    """The sender's correctness rests on the flush hook reporting the
+    durable horizon as contiguous, non-overlapping spans."""
+    from repro.wal.group_commit import GroupCommit
+    cfg = replace(LADDER["+GroupCommit"], n_fibers=16, pool_frames=512)
+    eng = StorageEngine(cfg, n_tuples=4_000, spec=NVMeSpec(**ENTERPRISE))
+    spans = []
+    # the public wiring: a second coordinator view registering its tap
+    GroupCommit(eng.wal, on_flush=lambda lo, hi: spans.append((lo, hi)))
+    eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 64)
+    assert spans, "flush hook never fired"
+    assert spans[0][0] == 4096         # first span starts at the header
+    for (alo, ahi), (blo, bhi) in zip(spans, spans[1:]):
+        assert ahi == blo, "flush spans must be contiguous"
+        assert bhi > blo
+    assert spans[-1][1] == eng.wal.durable_lsn

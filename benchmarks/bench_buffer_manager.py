@@ -3,7 +3,7 @@ model predictions printed next to each measurement (§3.2 methodology)."""
 
 from dataclasses import replace
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
 from repro.core.perfmodel import (CycleModel, LatencyModel, PAPER_C_TX,
                                   PAPER_C_READ_BATCH, PAPER_C_READ_SINGLE,
                                   PAPER_C_WRITE_BATCH)
@@ -43,3 +43,5 @@ def run(n_txns: int = 2500):
         emit(f"fig5/{cfg.name}/tps", round(res["tps"]),
              f"model={model/1e3:.1f}k paper={PAPER_TPS[cfg.name]}k "
              f"fault={fault:.2f} batch_eff={res['batch_eff']:.1f}")
+        emit_attribution(f"fig5/{cfg.name}", res["attribution"],
+                         res["app_cpu_s"] + res["sqpoll_cpu_s"])

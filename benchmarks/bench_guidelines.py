@@ -3,7 +3,8 @@ engine" — PostgreSQL-like constraints: filesystem storage (no passthrough,
 no IOPoll on data), CoopTR instead of DeferTR (multi-process model), OS
 buffered reads. Applying GL(3)+(4) must yield the paper's ~11-15%."""
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
+from repro.observe import diagnose, report_from_result
 from repro.storage.engine import EngineConfig, StorageEngine
 from repro.storage.workloads import ycsb_read_txn
 
@@ -39,3 +40,15 @@ def run(n_txns: int = 2500):
             base_tps = res["tps"]
         emit(f"fig17/{label}/tps", round(res["tps"]),
              f"speedup={res['tps']/base_tps:.3f}x")
+        emit_attribution(f"fig17/{label}", res["attribution"],
+                         res["app_cpu_s"] + res["sqpoll_cpu_s"])
+        # the advisor reads the same breakdown the rows above print:
+        # each rung's top finding should be the NEXT rung of the ladder
+        findings = diagnose(report_from_result(res))
+        top = findings[0] if findings else None
+        emit(f"fig17/{label}/diagnosis", top.rung if top else "ok",
+             f"rule={top.rule} severity={top.severity:.3f}"
+             if top else "no rule fired")
+        for f in findings[1:3]:
+            emit(f"fig17/{label}/diagnosis/{f.rule}", f.rung,
+                 f"severity={f.severity:.3f}")

@@ -22,7 +22,7 @@ costs, and what shipping itself costs on the wire.
 
 from dataclasses import replace
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
 from repro.core import NVMeSpec
 from repro.replication import ReplicatedCluster
 from repro.storage.engine import EngineConfig, StorageEngine
@@ -65,6 +65,8 @@ def run(n_txns: int = 512):
              f"acks_per_txn={res['acks'] / max(1, res['commits']):.3f} "
              f"ship_mb={res['ship_mb']:.2f} "
              f"apply_lag_b={res['standby_apply_lag_b']}")
+        emit_attribution(f"repl/modes/{name}", res["attribution"],
+                         res["app_cpu_s"] + res["sqpoll_cpu_s"])
 
     section("SEND_ZC vs copied ship (Fig. 16 crossover) (repl/zc)")
     # fat records -> fat flush spans, so the ship path dominates the

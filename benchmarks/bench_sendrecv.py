@@ -1,7 +1,7 @@
 """Paper Fig. 15 (small-message latency) & Fig. 16 (per-byte cost vs
 message size, zero-copy thresholds), on a real ring + SimSocket pair."""
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
 from repro.core import IoUring, SetupFlags, Timeline
 from repro.core.backends import NICSpec, SimNetwork, SimSocket
 from repro.core import ring as R
@@ -122,3 +122,10 @@ def run():
             emit(f"fig16/send/{label}/size={size}/cycles_per_byte",
                  round(cpb, 4),
                  "zc wins" if zc and size > 1024 else "")
+            if size == 262_144:
+                # one representative point: copy mode is all
+                # bounce_copy, zc mode trades it for zc_setup
+                emit_attribution(f"fig16/send/{label}/size={size}",
+                                 ra.stats.attribution,
+                                 ra.stats.cpu_seconds_app +
+                                 ra.stats.cpu_seconds_sqpoll)

@@ -18,7 +18,7 @@ visible in CI (the 20% acceptance band is asserted in
 tests/test_shuffle.py).
 """
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
 from repro.shuffle import ShuffleConfig, ShuffleSim
 from repro.shuffle.engine import ShuffleEngine
 
@@ -73,6 +73,12 @@ def run(total=192 * MiB, smoke=False):
                  f"enters={r['enters']}vs{base['enters']} "
                  f"batch={r['batch_eff']:.1f} "
                  f"ms_cqes={r['multishot_cqes']} zc={r['zc_notifs']}")
+            if ts == 4096:
+                # fat tuples: copy-vs-zc shows up as bounce_copy vs
+                # zc_setup in the breakdown
+                emit_attribution(f"fig13/tuple={ts}/{label}",
+                                 r["attribution"],
+                                 r["app_cpu_s"] + r["sqpoll_cpu_s"])
 
     section("network stack tuning (paper Fig. 14)")
     for tuned in (False, True):

@@ -33,7 +33,7 @@ Three sweeps:
 
 from dataclasses import replace
 
-from benchmarks.common import emit, section
+from benchmarks.common import emit, emit_attribution, section
 from repro.core import NVMeSpec
 from repro.storage.engine import EngineConfig, StorageEngine
 from repro.storage.workloads import TPCCLite, ycsb_update_txn
@@ -128,3 +128,7 @@ def run(n_txns: int = 768):
                      f"log_mb={res['log_mb']:.2f} "
                      f"evict_waits={res['wal_evict_waits']}")
         emit(f"fig9wal/tpcc/W={W}/{name}/tps", round(res["tps"]), extra)
+        # worker_fallback share separates +WAL (plain fsync -> io-wq)
+        # from the linked / passthrough rungs (GL3)
+        emit_attribution(f"fig9wal/tpcc/W={W}/{name}", res["attribution"],
+                         res["app_cpu_s"] + res["sqpoll_cpu_s"])

@@ -12,3 +12,32 @@ def emit(name: str, value, derived: str = "") -> None:
 
 def section(title: str) -> None:
     print(f"# --- {title} ---", flush=True)
+
+
+def emit_attribution(prefix: str, attribution, cpu_seconds=None) -> None:
+    """Emit a kernel-cost breakdown under ``{prefix}/attr/...``.
+
+    One row per non-zero category (value = microseconds, derived = share
+    of the attributed total), preceded by an ``attr/total`` row.  When
+    ``cpu_seconds`` (app + sqpoll CPU of the same rings) is given, the
+    conservation invariant — attributed sum equals charged CPU — is
+    checked here, so every bench section that emits a breakdown also
+    proves the books balance (check.sh greps for ``conserved=``)."""
+    import math
+
+    total = sum(attribution.values())
+    if cpu_seconds is None:
+        conserved = ""
+    else:
+        ok = math.isclose(total, cpu_seconds, rel_tol=1e-7, abs_tol=1e-9)
+        conserved = f"conserved={'yes' if ok else 'NO'}"
+        assert ok, (f"{prefix}: attribution {total!r} != "
+                    f"cpu {cpu_seconds!r}")
+    emit(f"{prefix}/attr/total", round(total * 1e6, 3), conserved)
+    for cat in sorted(attribution, key=attribution.get, reverse=True):
+        s = attribution[cat]
+        if s <= 0.0:
+            continue
+        share = s / total if total else 0.0
+        emit(f"{prefix}/attr/{cat}", round(s * 1e6, 3),
+             f"{share * 100:.1f}%")

@@ -58,23 +58,42 @@ def main() -> None:
                     help="tiny sizes: exercise every module quickly")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write all emitted rows to PATH as JSON")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record a ring/fiber event trace of the run and "
+                         "write it as Chrome trace-event JSON (open in "
+                         "Perfetto / chrome://tracing)")
     args = ap.parse_args()
     only = set(k for k in args.only.split(",") if k)
 
     import importlib
     from benchmarks.common import ROWS
+    tracer = None
+    if args.trace:
+        from repro.observe import trace as _trace
+        tracer = _trace.Tracer()
+        _trace.install(tracer)
     t00 = time.time()
     timings = {}
-    for key, modname in MODULES:
-        if only and key not in only:
-            continue
-        t0 = time.time()
-        mod = importlib.import_module(modname)
-        kw = SMOKE_KW.get(key, {}) if args.smoke else {}
-        mod.run(**kw)
-        timings[key] = round(time.time() - t0, 1)
-        print(f"# {key} done in {timings[key]}s", flush=True)
+    try:
+        for key, modname in MODULES:
+            if only and key not in only:
+                continue
+            t0 = time.time()
+            mod = importlib.import_module(modname)
+            kw = SMOKE_KW.get(key, {}) if args.smoke else {}
+            mod.run(**kw)
+            timings[key] = round(time.time() - t0, 1)
+            print(f"# {key} done in {timings[key]}s", flush=True)
+    finally:
+        if tracer is not None:
+            from repro.observe import trace as _trace
+            _trace.uninstall()
     print(f"# all benchmarks done in {time.time()-t00:.1f}s", flush=True)
+    if tracer is not None:
+        tracer.write(args.trace)
+        extra = " (truncated)" if tracer.truncated else ""
+        print(f"# wrote {len(tracer.events)} trace events to "
+              f"{args.trace}{extra}", flush=True)
     if args.json:
         payload = {
             "meta": {"smoke": args.smoke, "only": sorted(only),

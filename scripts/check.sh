@@ -8,6 +8,11 @@
 #      per-PR snapshot: every bench section present in the committed
 #      BENCH_pr*.json must still be emitted by the smoke run, so a
 #      silently dropped/renamed section fails fast
+#   4. a --trace smoke: one bench module under the ring tracer, then
+#      schema-validate the Chrome trace-event JSON (Perfetto-openable)
+#   5. an attribution-key diff: every kernel-cost category present in
+#      the committed snapshot's attr rows must still be emitted, and
+#      every attr/total row must say conserved=yes
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,14 +28,55 @@ snapshots = sorted(glob.glob("BENCH_pr*.json"),
                    key=lambda p: int(re.search(r"\d+", p).group()))
 assert snapshots, "no committed BENCH_pr*.json snapshot found"
 ref = snapshots[-1]                     # newest committed snapshot
-want = {r["name"].split("/")[0]
-        for r in json.load(open(ref))["rows"]}
-have = {r["name"].split("/")[0]
-        for r in json.load(open("BENCH_smoke.json"))["rows"]}
+ref_rows = json.load(open(ref))["rows"]
+smoke_rows = json.load(open("BENCH_smoke.json"))["rows"]
+want = {r["name"].split("/")[0] for r in ref_rows}
+have = {r["name"].split("/")[0] for r in smoke_rows}
 missing = want - have
 assert not missing, \
     f"bench sections in {ref} missing from the smoke run: " \
     f"{sorted(missing)}"
 print(f"# bench section keys OK: smoke covers all "
       f"{len(want)} sections of {ref}")
+
+# ---- kernel-cost attribution: category-key diff + conservation marks
+def attr_cats(rows):
+    return {r["name"].split("/attr/")[1] for r in rows
+            if "/attr/" in r["name"]
+            and not r["name"].endswith("/attr/total")}
+
+want, have = attr_cats(ref_rows), attr_cats(smoke_rows)
+missing = want - have
+assert not missing, \
+    f"attribution categories in {ref} missing from smoke: " \
+    f"{sorted(missing)}"
+totals = [r for r in smoke_rows if r["name"].endswith("/attr/total")]
+assert totals, "no attr/total rows in the smoke snapshot"
+bad = [r["name"] for r in totals if r["derived"] != "conserved=yes"]
+assert not bad, f"attribution not conserved in: {bad}"
+print(f"# attribution OK: {len(have)} categories, "
+      f"{len(totals)} sections conserved")
+EOF
+python -m benchmarks.run --smoke --only fig9wal --trace trace_smoke.json \
+    > /dev/null
+python - <<'EOF'
+import json
+
+doc = json.load(open("trace_smoke.json"))
+assert set(doc) >= {"traceEvents", "displayTimeUnit"}, "bad top level"
+evs = doc["traceEvents"]
+assert evs, "empty trace"
+for e in evs:
+    assert e["ph"] in ("X", "i", "I", "M", "B", "E", "C"), e
+    assert isinstance(e["pid"], int)
+    if e["ph"] != "M":
+        assert e["ts"] >= 0.0, e
+    if e["ph"] == "X":
+        assert e["dur"] >= 0.0, e
+meta = {e["name"] for e in evs if e["ph"] == "M"}
+assert {"process_name", "thread_name"} <= meta, "missing track labels"
+slices = {e["name"] for e in evs if e["ph"] == "X"}
+assert "wal-leader" in slices, "group-commit leader track missing"
+print(f"# trace OK: {len(evs)} Chrome trace events, "
+      f"{len(slices)} labeled fiber tracks")
 EOF

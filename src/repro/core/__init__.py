@@ -18,6 +18,6 @@ from repro.core.ring import (BufferRing, IoUring, prep_fsync, prep_nop,
                              prep_read, prep_read_fixed, prep_recv,
                              prep_send, prep_timeout, prep_uring_cmd,
                              prep_write, prep_write_fixed)
-from repro.core.sqe import (CQE, SQE, CqeFlags, Op, RingStats, SetupFlags,
-                            SqeFlags)
+from repro.core.sqe import (CQE, SQE, CqeFlags, LatHist, Op, RingStats,
+                            SetupFlags, SqeFlags, op_class)
 from repro.core.timeline import CoreClock, Timeline

@@ -19,6 +19,28 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 
+#: attribution categories: every cost the ring charges is tagged with
+#: exactly one of these, so RingStats.attribution sums back to
+#: cpu_seconds_app + cpu_seconds_sqpoll (the conservation invariant the
+#: observability layer rests on — see docs/observability.md)
+CATEGORIES = (
+    "syscall",          # io_uring_enter
+    "submit_floor",     # per-SQE kernel submission floor
+    "task_work",        # placing the CQE
+    "complete_irq",     # interrupt-driven completion handling
+    "complete_poll",    # IOPoll completion reap
+    "ipi",              # default task-work mode: preemption IPI
+    "ring_lock",        # shared-ring anti-pattern: SQ lock handoff
+    "bounce_copy",      # kernel<->user socket copies (non-ZC send/recv)
+    "pin_copy",         # storage per-op pin+copy (no registered buffers)
+    "storage_stack",    # generic storage stack (no NVMe passthrough)
+    "sock_submit",      # socket submission work
+    "sock_speculative", # wasted speculative inline recv attempt
+    "zc_setup",         # zero-copy / fixed-buffer registration per op
+    "sqpoll",           # SQPoll thread's submission polling
+)
+
+
 @dataclass
 class CostModel:
     clock_hz: float = 3.7e9

@@ -53,6 +53,7 @@ from repro.core.adaptive import AdaptiveBatcher, SubmitPolicy
 from repro.core.ring import IoUring
 from repro.core.sqe import CQE, SQE, CqeFlags
 from repro.core.timeline import CoreClock
+from repro.observe import trace as _trace
 
 
 @dataclass
@@ -115,11 +116,13 @@ class _Stream:
 class Fiber:
     _ids = itertools.count(1)
 
-    def __init__(self, gen: Generator, *, core: int = 0, ring: int = 0):
+    def __init__(self, gen: Generator, *, core: int = 0, ring: int = 0,
+                 name: str = ""):
         self.id = next(Fiber._ids)
         self.gen = gen
         self.core = core                  # CoreClock index (multi-core)
         self.ring_idx = ring              # ring index (ring-per-worker)
+        self.name = name                  # trace track label (optional)
         self.done = False
         self.value: Any = None            # generator return value
         self._pending = 0
@@ -127,7 +130,8 @@ class Fiber:
         self._group = False
 
     def __repr__(self):
-        return f"<Fiber {self.id}{' done' if self.done else ''}>"
+        label = f" {self.name}" if self.name else ""
+        return f"<Fiber {self.id}{label}{' done' if self.done else ''}>"
 
 
 class FiberScheduler:
@@ -183,8 +187,8 @@ class FiberScheduler:
     # ------------------------------------------------------------------
 
     def spawn(self, gen: Generator, *, core: int = 0,
-              ring: int = 0) -> Fiber:
-        f = Fiber(gen, core=core, ring=ring)
+              ring: int = 0, name: str = "") -> Fiber:
+        f = Fiber(gen, core=core, ring=ring, name=name)
         self.ready.append((f, None))
         return f
 
@@ -334,6 +338,30 @@ class FiberScheduler:
 
     # ------------------------------------------------------------------
 
+    def _fiber_clock(self, fiber: Fiber) -> float:
+        """The resumed fiber's CPU clock — its core horizon in
+        multi-core mode, the global clock otherwise.  Trace-only."""
+        if self.mc:
+            return max(self.ring.tl.now, self.cores[fiber.core].free)
+        return self.ring.tl.now
+
+    def _trace_slice(self, tr, fiber: Fiber, t0: float,
+                     mark: str = "") -> None:
+        """One "X" slice on the fiber's core track covering this resume
+        (pure clock reads: tracing charges nothing — observer effect is
+        zero, asserted in tests)."""
+        t1 = self._fiber_clock(fiber)
+        core = self.cores[fiber.core] if self.mc else None
+        label = core.name if (core is not None and core.name) \
+            else f"core{fiber.core}"
+        tr.process_name(_trace.FIBER_PID, "cores/fibers")
+        tr.thread_name(_trace.FIBER_PID, fiber.core, label)
+        tr.complete(fiber.name or f"fiber{fiber.id}", t0, t1 - t0,
+                    _trace.FIBER_PID, fiber.core)
+        if mark:
+            tr.instant(mark, t1, _trace.FIBER_PID, fiber.core,
+                       {"fiber": fiber.name or fiber.id})
+
     def _resume(self, fiber: Fiber, send_val) -> None:
         if self.mc:
             # a shared (contended) ring is submitted to by many cores:
@@ -344,6 +372,8 @@ class FiberScheduler:
                 ring.core = self.cores[fiber.core]
         if self.on_resume is not None:
             self.on_resume(fiber)
+        tr = _trace.CURRENT
+        t0 = self._fiber_clock(fiber) if tr is not None else 0.0
         if self.switch_cost_s:
             if self.mc:
                 self.cores[fiber.core].charge(self.ring.tl.now,
@@ -357,8 +387,14 @@ class FiberScheduler:
             fiber.done = True
             fiber.value = stop.value
             self.completed_fibers += 1
+            if tr is not None:
+                self._trace_slice(tr, fiber, t0, mark="fiber-done")
             self._reap_abandoned_streams(fiber)
             return
+        if tr is not None:
+            self._trace_slice(
+                tr, fiber, t0,
+                mark="fiber-park" if isinstance(req, Gate) else "")
         if req is None:                   # cooperative re-queue
             self.ready.append((fiber, None))
             return

@@ -17,14 +17,19 @@ tagged in the CQE flags so benchmarks can attribute cycles.
 
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from typing import Dict, List, Optional
 
 from repro.core.backends import FileBackend, SimNVMe, SimSocket
 from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.sqe import (CQE, EAGAIN, ECANCELED, EINVAL, ETIME, SQE,
-                            CqeFlags, Op, RingStats, SetupFlags, SqeFlags)
+                            CqeFlags, Op, RingStats, SetupFlags, SqeFlags,
+                            op_class)
 from repro.core.timeline import CoreClock, Timeline
+# passive event sink (repro.observe.trace.CURRENT); imports nothing
+# back from repro.core, and costs nothing when no tracer is installed
+from repro.observe import trace as _trace
 
 
 class RegisteredBuffers:
@@ -65,6 +70,8 @@ class BufferRing:
 
 
 class IoUring:
+    _ring_ids = itertools.count()
+
     def __init__(self, timeline: Timeline, *, sq_depth: int = 256,
                  cq_depth: int = 0, setup: SetupFlags = SetupFlags.NONE,
                  costs: CostModel = DEFAULT_COSTS, n_workers: int = 32,
@@ -103,6 +110,7 @@ class IoUring:
         self._sqpoll_asleep = True
         self._chain: List[SQE] = []
         self._device_cq: deque = deque()
+        self.ring_id = next(IoUring._ring_ids)   # trace track id
 
     # ------------------------------------------------------------------ API
 
@@ -165,8 +173,17 @@ class IoUring:
     def peek_cqe(self) -> Optional[CQE]:
         self._poll_device_queues()
         if self.cq:
+            cqe = self.cq.popleft()
             self.stats.cqes_reaped += 1
-            return self.cq.popleft()
+            if cqe.flags & CqeFlags.ZC_NOTIF:
+                self.stats.zc_notif_cqes_reaped += 1
+            tr = _trace.CURRENT
+            if tr is not None:
+                self._trace(tr, "cqe:zc_notif" if
+                            cqe.flags & CqeFlags.ZC_NOTIF else "cqe",
+                            self._cpu_now(), {"ud": cqe.user_data,
+                                              "res": cqe.res})
+            return cqe
         return None
 
     def wait_cqe(self) -> CQE:
@@ -195,8 +212,13 @@ class IoUring:
     def _enter(self, to_submit: int, min_complete: int) -> int:
         self.stats.enters += 1
         if self.contended:
-            self._charge(self.costs.ring_lock, False)
-        self._charge(self.costs.syscall, False)
+            self._charge(self.costs.ring_lock, False, "ring_lock")
+        self._charge(self.costs.syscall, False, "syscall")
+        tr = _trace.CURRENT
+        if tr is not None:
+            self._trace(tr, "enter", self._cpu_now(),
+                        {"to_submit": min(to_submit, len(self.sq)),
+                         "min_complete": min_complete})
         n = 0
         for _ in range(min(to_submit, len(self.sq))):
             sqe = self.sq.popleft()
@@ -238,11 +260,20 @@ class IoUring:
         self.stats.sqes_submitted += n
         # the app spent no syscall; sqpoll core burns its own time
         self.stats.cpu_seconds_sqpoll += c.s(c.submit_floor_read) * n
+        self.stats.attribute("sqpoll", "ring", c.s(c.submit_floor_read) * n)
         return n
 
     def _kernel_submit(self, sqe: SQE, *, on_sqpoll: bool = False) -> None:
         c = self.costs
-        sqe._t_submit = self.tl.now          # for CQE latency accounting
+        # CQE latency accounting: stamp the submitting CPU's clock, not
+        # the (possibly lagging) global event clock — in multi-core mode
+        # charges advance the core horizon only, and an inline completion
+        # stamped off tl.now would report zero latency
+        sqe._t_submit = self._cpu_now()
+        tr = _trace.CURRENT
+        if tr is not None:
+            self._trace(tr, f"sqe:{op_class(sqe.op)}", sqe._t_submit,
+                        {"ud": sqe.user_data})
         # linking: buffer the chain until a non-linked SQE terminates it
         if sqe.flags & SqeFlags.IO_LINK:
             self._chain.append(sqe)
@@ -276,7 +307,8 @@ class IoUring:
                on_sqpoll: bool = False) -> None:
         c = self.costs
         if sqe.op == Op.NOP:
-            self._charge(c.submit_floor_nop, on_sqpoll)
+            self._charge(c.submit_floor_nop, on_sqpoll, "submit_floor",
+                         "nop")
             if sqe.flags & SqeFlags.ASYNC:
                 self._worker_complete(sqe, 0.0, 0, then)
             else:
@@ -307,19 +339,20 @@ class IoUring:
     def _issue_nvme(self, sqe: SQE, dev: SimNVMe, then, timeout,
                     timeout_ud: int, on_sqpoll: bool) -> None:
         c = self.costs
+        cls = op_class(sqe.op)
         write = sqe.op in (Op.WRITEV, Op.WRITE_FIXED)
-        cost = c.submit_floor_write if write else c.submit_floor_read
         if sqe.op == Op.URING_CMD or sqe.cmd:         # NVMe passthrough
             if not dev.supports_passthrough():
                 self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
                 return
         else:
-            cost += c.storage_stack
+            self._charge(c.storage_stack, on_sqpoll, "storage_stack", cls)
+        self._charge(c.submit_floor_write if write else c.submit_floor_read,
+                     on_sqpoll, "submit_floor", cls)
         fixed = sqe.op in (Op.READ_FIXED, Op.WRITE_FIXED)
         if not fixed and sqe.length > 0:
-            cost += c.pin_copy
+            self._charge(c.pin_copy, on_sqpoll, "pin_copy", cls)
             self.stats.bounce_bytes_copied += sqe.length
-        self._charge(cost, on_sqpoll)
 
         buf = self._buf_for(sqe)
         if write:
@@ -361,13 +394,15 @@ class IoUring:
         c = self.costs
         zc = sqe.op == Op.SEND_ZC
         fixed = sqe.buf_index >= 0
-        cost = c.sock_submit
+        self._charge(c.sock_submit, on_sqpoll, "sock_submit", "send")
         if zc or fixed:
-            cost += c.zc_setup
+            self._charge(c.zc_setup, on_sqpoll, "zc_setup", "send")
         else:
-            cost += c.copy_cycles(sqe.length)
+            self._charge(c.copy_cycles(sqe.length), on_sqpoll,
+                         "bounce_copy", "send")
             self.stats.bounce_bytes_copied += sqe.length
-        self._charge(cost, on_sqpoll)
+            self.stats.sends_copied += 1
+            self.stats.send_bytes_copied += sqe.length
         t_cpu = self._cpu_now()
         # data plane: if the SQE carries a buffer, ship its first
         # ``length`` bytes (captured at submission; see SimSocket)
@@ -404,10 +439,11 @@ class IoUring:
             if bring is None:
                 self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
                 return
-        cost = c.sock_submit
+        self._charge(c.sock_submit, on_sqpoll, "sock_submit", "recv")
         if not (sqe.flags & SqeFlags.POLL_FIRST):
-            cost += c.sock_speculative       # speculative inline attempt
-        self._charge(cost, on_sqpoll)
+            # speculative inline attempt
+            self._charge(c.sock_speculative, on_sqpoll,
+                         "sock_speculative", "recv")
         multishot = bool(sqe.flags & SqeFlags.MULTISHOT)
         # POLL_FIRST skips the speculative inline attempt entirely —
         # popping the queue here would discard the message (the waiter
@@ -421,10 +457,15 @@ class IoUring:
                 if bid is None:
                     sock.unrecv(got)
                     self.stats.buf_ring_exhausted += 1
+                    tr = _trace.CURRENT
+                    if tr is not None:
+                        self._trace(tr, "buf_ring_exhausted",
+                                    self._cpu_now(), {"ud": sqe.user_data})
                     self._complete(sqe, EAGAIN, CqeFlags.INLINE, then)
                     return
             if not (zc or fixed):
-                self._charge(c.copy_cycles(got), on_sqpoll)
+                self._charge(c.copy_cycles(got), on_sqpoll,
+                             "bounce_copy", "recv")
                 self.stats.bounce_bytes_copied += got
             self._deliver_payload(sqe, bring, bid, sock.last_payload)
             self._complete(sqe, got, CqeFlags.INLINE, then, buf_id=bid)
@@ -445,19 +486,22 @@ class IoUring:
                     sock.rx_waiters.remove(on_ready)
                     self._ms_waiters.pop(sqe.user_data, None)
                     self.stats.buf_ring_exhausted += 1
+                    tr = _trace.CURRENT
+                    if tr is not None:
+                        self._trace(tr, "buf_ring_exhausted", self.tl.now,
+                                    {"ud": sqe.user_data})
                     self._async_complete(sqe, EAGAIN, then,
                                          flags=CqeFlags.POLLED)
                     return
             if not (zc or fixed):                  # kernel->user copy
-                self._charge(c.copy_cycles(g), False)
+                self._charge(c.copy_cycles(g), False, "bounce_copy",
+                             "recv")
                 self.stats.bounce_bytes_copied += g
             self._deliver_payload(sqe, bring, bid, sock.last_payload)
             flags = CqeFlags.POLLED
             if multishot:
                 flags |= CqeFlags.MORE             # armed: one SQE, more CQEs
-                self.stats.multishot_cqes += 1     # recv-path CQEs only —
-                                                   # SEND_ZC's MORE-flagged
-                                                   # completion doesn't count
+                self.stats.multishot_recv_cqes += 1
             else:
                 sock.rx_waiters.remove(on_ready)
             self._async_complete(sqe, g, then, flags=flags, buf_id=bid)
@@ -523,10 +567,18 @@ class IoUring:
         iopoll = bool(self.setup & SetupFlags.IOPOLL)
         if flags & CqeFlags.ZC_NOTIF:
             self.stats.zc_notifs += 1
+            tr = _trace.CURRENT
+            if tr is not None:
+                self._trace(tr, "zc_notif", self.tl.now,
+                            {"ud": sqe.user_data})
         cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
                   buf_id=buf_id,
                   t_submit=getattr(sqe, "_t_submit", self.tl.now),
                   t_complete=self.tl.now)
+        if res >= 0:
+            self.stats.record_latency(
+                "zc_notif" if flags & CqeFlags.ZC_NOTIF
+                else op_class(sqe.op), cqe.latency)
         if iopoll:
             self._device_cq.append(cqe)
         else:
@@ -535,7 +587,7 @@ class IoUring:
                 # default & CoopTR: task work runs on the next kernel
                 # transition; default mode may IPI-preempt a busy app core
                 if not (self.setup & SetupFlags.COOP_TASKRUN):
-                    self._charge(c.preempt_ipi, False)
+                    self._charge(c.preempt_ipi, False, "ipi")
                 self._run_task_work()
         if then:   # IO_LINK chain progression is kernel-side
             then()
@@ -546,7 +598,7 @@ class IoUring:
         c = self.costs
         while self._device_cq:
             cqe = self._device_cq.popleft()
-            self._charge(c.complete_polled, False)
+            self._charge(c.complete_polled, False, "complete_poll")
             self.cq.append(cqe)
             self.stats.polled_completions += 1
 
@@ -554,18 +606,23 @@ class IoUring:
         c = self.costs
         while self._pending_task_work:
             cqe = self._pending_task_work.popleft()
-            self._charge(c.task_work, False)
-            if not (cqe.flags & CqeFlags.WORKER):
-                self._charge(c.complete_irq if not
-                             (self.setup & SetupFlags.IOPOLL) else 0, False)
+            self._charge(c.task_work, False, "task_work")
+            if not (cqe.flags & CqeFlags.WORKER) and \
+                    not (self.setup & SetupFlags.IOPOLL):
+                self._charge(c.complete_irq, False, "complete_irq")
             self.cq.append(cqe)
 
     def _complete(self, sqe: SQE, res: int, flags: CqeFlags, then,
                   buf_id: int = -1) -> None:
+        # t_complete off the submitting CPU's clock (see _kernel_submit):
+        # inline completions in multi-core mode otherwise collapse to
+        # zero latency because charges never advance the event clock
         cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
                   buf_id=buf_id,
                   t_submit=getattr(sqe, "_t_submit", self.tl.now),
-                  t_complete=self.tl.now)
+                  t_complete=self._cpu_now())
+        if res >= 0:
+            self.stats.record_latency(op_class(sqe.op), cqe.latency)
         self.cq.append(cqe)
         if flags & CqeFlags.INLINE:
             self.stats.inline_completions += 1
@@ -593,8 +650,25 @@ class IoUring:
             return max(self.tl.now, self.core.free)
         return self.tl.now
 
-    def _charge(self, cycles: float, on_sqpoll: bool) -> None:
+    def _trace(self, tr, name: str, ts: float,
+               args: Optional[dict] = None) -> None:
+        """Emit one instant on this ring's trace track (reads clocks
+        only — never charges or advances them)."""
+        pid = _trace.RING_PID_BASE + self.ring_id
+        tr.process_name(pid, f"ring{self.ring_id}")
+        tr.instant(name, ts, pid, 0, args)
+
+    def _charge(self, cycles: float, on_sqpoll: bool, cat: str,
+                op_cls: str = "ring") -> None:
+        """Charge ``cycles`` to the right clock AND attribute the same
+        seconds to ``(cat, op_cls)`` — the conservation invariant
+        (attribution sums back to the cpu_seconds totals) holds because
+        this is the only place app/sqpoll seconds accumulate, except
+        ``_sqpoll_submit``'s polling floor which self-attributes."""
+        if cycles == 0:
+            return
         dt = self.costs.s(cycles)
+        self.stats.attribute(cat, op_cls, dt)
         if on_sqpoll:
             self.stats.cpu_seconds_sqpoll += dt
             self._sqpoll_busy_until = max(self._sqpoll_busy_until,
@@ -605,8 +679,16 @@ class IoUring:
             self.stats.cpu_seconds_app += dt
             if self.contended:
                 # shared ring: the charge also holds the ring lock, so
-                # other cores' ring work queues behind it
-                t0 = max(self.tl.now, self.core.free, self._lock_free)
+                # other cores' ring work queues behind it.  The stall
+                # spent spinning on the lock is burned CPU on THIS core
+                # — attributed as ring_lock, the advisor's shared-ring
+                # signature (still conserved: it joins cpu_seconds_app)
+                free0 = max(self.tl.now, self.core.free)
+                t0 = max(free0, self._lock_free)
+                wait = t0 - free0
+                if wait > 0.0:
+                    self.stats.cpu_seconds_app += wait
+                    self.stats.attribute("ring_lock", "ring", wait)
                 self.core.free = t0 + dt
                 self._lock_free = self.core.free
             else:

@@ -9,8 +9,9 @@ against a "device memory" backend.
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 
 class Op(enum.IntEnum):
@@ -28,6 +29,26 @@ class Op(enum.IntEnum):
     LINK_TIMEOUT = 11    # bounds the linked previous op
     URING_CMD = 12       # NVMe passthrough (bypasses the generic storage stack)
     POLL_ADD = 13
+
+
+#: op -> op class for cost attribution and latency histograms; batch-
+#: level charges that belong to no single op (enter syscall, ring lock,
+#: task work, IPIs, completion handling) use the pseudo-class "ring"
+_OP_CLASS = {
+    Op.NOP: "nop",
+    Op.READV: "read", Op.READ_FIXED: "read",
+    Op.WRITEV: "write", Op.WRITE_FIXED: "write",
+    Op.FSYNC: "fsync",
+    Op.SEND: "send", Op.SEND_ZC: "send",
+    Op.RECV: "recv", Op.RECV_ZC: "recv",
+    Op.TIMEOUT: "timeout", Op.LINK_TIMEOUT: "timeout",
+    Op.URING_CMD: "cmd",
+    Op.POLL_ADD: "poll",
+}
+
+
+def op_class(op: Op) -> str:
+    return _OP_CLASS.get(op, "other")
 
 
 class SqeFlags(enum.IntFlag):
@@ -100,10 +121,69 @@ class CQE:
         return self.t_complete - self.t_submit
 
 
+class LatHist:
+    """Log2-bucketed latency histogram: O(1) record, ~percent-accurate
+    percentiles — cheap enough to run on every CQE unconditionally.
+    Bucket ``b`` holds latencies in ``(FLOOR*2^(b-1), FLOOR*2^b]``."""
+
+    __slots__ = ("counts", "n", "total_s")
+
+    FLOOR = 1e-8                   # 10 ns
+    NBUCKETS = 40                  # covers up to ~5000 s
+
+    def __init__(self):
+        self.counts = [0] * self.NBUCKETS
+        self.n = 0
+        self.total_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        if seconds < 0.0:
+            seconds = 0.0
+        self.n += 1
+        self.total_s += seconds
+        b = 0
+        if seconds > self.FLOOR:
+            b = min(self.NBUCKETS - 1,
+                    int(math.ceil(math.log2(seconds / self.FLOOR))))
+        self.counts[b] += 1
+
+    def percentile(self, p: float) -> float:
+        """Geometric-midpoint estimate of the p-th percentile (seconds)."""
+        if self.n == 0:
+            return 0.0
+        target = p / 100.0 * self.n
+        cum = 0
+        for b, c in enumerate(self.counts):
+            cum += c
+            if cum >= target:
+                if b == 0:
+                    return self.FLOOR / 2
+                return math.sqrt((self.FLOOR * 2 ** (b - 1)) *
+                                 (self.FLOOR * 2 ** b))
+        return self.FLOOR * 2 ** (self.NBUCKETS - 1)
+
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    def mean(self) -> float:
+        return self.total_s / self.n if self.n else 0.0
+
+
 @dataclass
 class RingStats:
     """Counters used by benchmarks and by the guideline checks (GL3: a high
-    worker-fallback rate indicates a suboptimal I/O pattern)."""
+    worker-fallback rate indicates a suboptimal I/O pattern).
+
+    ``attribution`` is the kernel-cost breakdown: every cost the ring
+    charges lands in exactly one category (see ``CostModel.CATEGORIES``)
+    so that ``sum(attribution.values()) ==
+    cpu_seconds_app + cpu_seconds_sqpoll`` to float epsilon — the
+    conservation invariant the observability layer (and check.sh) rests
+    on.  ``op_attribution`` splits the same seconds by op class
+    ('read', 'write', 'send', ..., 'ring' for batch-level charges)."""
 
     enters: int = 0
     sqes_submitted: int = 0
@@ -115,9 +195,54 @@ class RingStats:
     bounce_bytes_copied: int = 0   # kernel<->user copies avoided by RegBufs/ZC
     cpu_seconds_app: float = 0.0   # CPU charged to the application core
     cpu_seconds_sqpoll: float = 0.0
-    multishot_cqes: int = 0        # CQEs carrying CqeFlags.MORE
+    #: MORE-flagged CQEs of multishot RECVs only — SEND_ZC's MORE-flagged
+    #: request completion is deliberately NOT counted here (its deferred
+    #: buffer release is ``zc_notifs``); see test_observability.py
+    multishot_recv_cqes: int = 0
     zc_notifs: int = 0             # SEND_ZC buffer-release notifications
+    zc_notif_cqes_reaped: int = 0  # of cqes_reaped: ZC_NOTIF (not data)
     buf_ring_exhausted: int = 0    # recvs terminated for lack of a buffer
+    sends_copied: int = 0          # non-ZC sends that bounced (advisor)
+    send_bytes_copied: int = 0     # bytes those sends copied
+    # kernel-cost attribution (seconds; see class docstring)
+    attribution: Dict[str, float] = field(default_factory=dict)
+    op_attribution: Dict[str, Dict[str, float]] = field(
+        default_factory=dict)
+    # per-op-class completion-latency histograms (CQE.latency)
+    lat: Dict[str, LatHist] = field(default_factory=dict)
 
     def batch_efficiency(self) -> float:
         return self.sqes_submitted / max(1, self.enters)
+
+    @property
+    def multishot_cqes(self) -> int:
+        """Deprecated alias for ``multishot_recv_cqes``."""
+        return self.multishot_recv_cqes
+
+    @property
+    def data_cqes_reaped(self) -> int:
+        """Of ``cqes_reaped``: CQEs carrying data/results, i.e. not
+        SEND_ZC buffer-release notifications."""
+        return self.cqes_reaped - self.zc_notif_cqes_reaped
+
+    def attribute(self, cat: str, op_cls: str, seconds: float) -> None:
+        self.attribution[cat] = self.attribution.get(cat, 0.0) + seconds
+        per_op = self.op_attribution.setdefault(op_cls, {})
+        per_op[cat] = per_op.get(cat, 0.0) + seconds
+
+    def attributed_seconds(self) -> float:
+        return sum(self.attribution.values())
+
+    def record_latency(self, op_cls: str, seconds: float) -> None:
+        h = self.lat.get(op_cls)
+        if h is None:
+            h = self.lat[op_cls] = LatHist()
+        h.record(seconds)
+
+    def latency_summary(self) -> Dict[str, Dict[str, float]]:
+        """{op_class: {n, p50_us, p99_us, mean_us}} for benchmarks."""
+        return {cls: {"n": h.n,
+                      "p50_us": h.p50() * 1e6,
+                      "p99_us": h.p99() * 1e6,
+                      "mean_us": h.mean() * 1e6}
+                for cls, h in self.lat.items()}

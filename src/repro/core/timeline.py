@@ -32,6 +32,7 @@ class CoreClock:
     ``storage.engine.EngineConfig.multicore``)."""
 
     free: float = 0.0
+    name: str = ""      # trace track label ("core3", "shuf-n0w2", ...)
 
     def charge(self, now: float, seconds: float) -> float:
         """Occupy the core for ``seconds`` starting no earlier than

@@ -1,0 +1,17 @@
+"""Kernel-cost observability for the ring runtime (paper §5 / ROADMAP).
+
+Three layers, all reading the same per-ring accounting:
+
+* ``repro.core`` tags every charged cost with a category and an op
+  class (``RingStats.attribution``) under a conservation invariant —
+  the attributed sum equals ``cpu_seconds_app + cpu_seconds_sqpoll``;
+* ``trace`` exports an opt-in, zero-observer-effect event trace
+  (Chrome ``trace_event`` JSON, openable in Perfetto);
+* ``advisor`` turns an attribution breakdown into the paper's
+  guideline diagnoses — each finding names the ladder rung that
+  fixes the detected anti-pattern.
+"""
+
+from repro.observe.advisor import (Finding, RingReport, diagnose,
+                                   report_from_result, report_from_stats)
+from repro.observe.trace import Tracer, current, install, uninstall

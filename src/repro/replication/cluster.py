@@ -110,12 +110,18 @@ class ReplicatedCluster:
         its own attached ring."""
         p, s = self.primary, self.standby
         stop = lambda: all(f.done for f in workers)       # noqa: E731
-        p.sched.spawn(self.sender.run(stop), core=0, ring=0)
-        p.sched.spawn(self._ack_receiver(), core=0, ring=0)
-        p.sched.spawn(self._watcher(stop), core=0, ring=0)
-        p.sched.spawn(s.receiver(), core=s.core_idx, ring=s.ring_idx)
-        p.sched.spawn(s.flusher(), core=s.core_idx, ring=s.ring_idx)
-        p.sched.spawn(s.applier(), core=s.core_idx, ring=s.ring_idx)
+        p.sched.spawn(self.sender.run(stop), core=0, ring=0,
+                      name="repl-sender")
+        p.sched.spawn(self._ack_receiver(), core=0, ring=0,
+                      name="repl-ack-recv")
+        p.sched.spawn(self._watcher(stop), core=0, ring=0,
+                      name="repl-watcher")
+        p.sched.spawn(s.receiver(), core=s.core_idx, ring=s.ring_idx,
+                      name="standby-receiver")
+        p.sched.spawn(s.flusher(), core=s.core_idx, ring=s.ring_idx,
+                      name="standby-flusher")
+        p.sched.spawn(s.applier(), core=s.core_idx, ring=s.ring_idx,
+                      name="standby-applier")
 
     def _watcher(self, stop):
         """Wakes the (gate-parked) sender when the workload quiesces —

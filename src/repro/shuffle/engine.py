@@ -240,14 +240,17 @@ class ShuffleEngine:
         for node in range(n):
             for w in range(cfg.n_workers):
                 slot = self._slot(node, w)
+                self.cores[slot].name = f"shuf-n{node}w{w}"
                 self.sched.spawn(self._sender(node, w),
-                                 core=slot, ring=slot)
+                                 core=slot, ring=slot,
+                                 name=f"shuf-send-n{node}w{w}")
             for p in range(n):
                 if p == node:
                     continue
                 slot = self._slot(node, receiver_worker(cfg, node, p))
                 self.sched.spawn(self._receiver(node, p),
-                                 core=slot, ring=slot)
+                                 core=slot, ring=slot,
+                                 name=f"shuf-recv-n{node}<-n{p}")
         self.sched.run()
         assert sum(self.sent) == sum(self.received), "bytes lost in flight"
 
@@ -272,11 +275,25 @@ class ShuffleEngine:
             "enters": enters,
             "sqes_submitted": sqes,
             "batch_eff": sqes / max(1, enters),
-            "multishot_cqes": sum(r.stats.multishot_cqes
+            "multishot_cqes": sum(r.stats.multishot_recv_cqes
                                   for r in self.rings),
             "zc_notifs": sum(r.stats.zc_notifs for r in self.rings),
             "buf_ring_exhausted": sum(r.stats.buf_ring_exhausted
                                       for r in self.rings),
             "bounce_bytes": sum(r.stats.bounce_bytes_copied
                                 for r in self.rings),
+            "app_cpu_s": ring_cpu,
+            "sqpoll_cpu_s": sum(r.stats.cpu_seconds_sqpoll
+                                for r in self.rings),
+            "sends_copied": sum(r.stats.sends_copied for r in self.rings),
+            "send_bytes_copied": sum(r.stats.send_bytes_copied
+                                     for r in self.rings),
+            "attribution": self._merged_attribution(),
         }
+
+    def _merged_attribution(self) -> Dict[str, float]:
+        attr: Dict[str, float] = {}
+        for r in self.rings:
+            for k, v in r.stats.attribution.items():
+                attr[k] = attr.get(k, 0.0) + v
+        return attr

@@ -575,12 +575,15 @@ class StorageEngine:
                 c = i % self.n_cores
                 workers.append(self.sched.spawn(
                     worker(), core=c,
-                    ring=0 if self.cfg.shared_ring else c))
+                    ring=0 if self.cfg.shared_ring else c,
+                    name=f"txn-worker{i}"))
             else:
-                workers.append(self.sched.spawn(worker()))
+                workers.append(self.sched.spawn(worker(),
+                                                name=f"txn-worker{i}"))
         done = lambda: counter["done"] >= n_txns          # noqa: E731
         if self.wal is not None and self.cfg.ckpt_every > 0:
-            self.sched.spawn(self._checkpointer(counter, n_txns))
+            self.sched.spawn(self._checkpointer(counter, n_txns),
+                             name="checkpointer")
         if self.wal is not None:
             if self.mc:
                 # one background writer per core, cleaning its own pool
@@ -588,13 +591,16 @@ class StorageEngine:
                 for c in range(self.n_cores):
                     self.sched.spawn(
                         self.page_cleaner_part(c, stop=done), core=c,
-                        ring=0 if self.cfg.shared_ring else c)
+                        ring=0 if self.cfg.shared_ring else c,
+                        name=f"page-cleaner{c}")
             else:
-                self.sched.spawn(self.page_cleaner(stop=done))
+                self.sched.spawn(self.page_cleaner(stop=done),
+                                 name="page-cleaner")
         if isinstance(self.gc, MultiCoreGroupCommit):
             self.sched.spawn(self.gc.leader(
                 stop=lambda: self.gc.pending == 0 and
-                all(f.done for f in workers)), core=0, ring=0)
+                all(f.done for f in workers)), core=0, ring=0,
+                name="wal-leader")
         if self.repl is not None:
             # replication fibers: primary log sender + ack receiver,
             # standby receiver/flusher/applier (repro.replication)
@@ -620,6 +626,10 @@ class StorageEngine:
             "bounce_mb": rs["bounce_bytes"] / 1e6,
             "app_cpu_s": rs["cpu_app"],
             "sqpoll_cpu_s": rs["cpu_sqpoll"],
+            # kernel-cost breakdown, merged over the engine's own rings;
+            # conservation vs app_cpu_s+sqpoll_cpu_s is checked at bench
+            # emission and by tests/test_observability.py
+            "attribution": rs["attribution"],
         }
         if self.mc:
             out.update({
@@ -659,6 +669,10 @@ class StorageEngine:
         one core is just the identity; an attached standby ring reports
         separately via the cluster)."""
         rings = self._own_rings
+        attr: Dict[str, float] = {}
+        for r in rings:
+            for k, v in r.stats.attribution.items():
+                attr[k] = attr.get(k, 0.0) + v
         return {
             "enters": sum(r.stats.enters for r in rings),
             "sqes": sum(r.stats.sqes_submitted for r in rings),
@@ -669,6 +683,7 @@ class StorageEngine:
             "cpu_app": sum(r.stats.cpu_seconds_app for r in rings),
             "cpu_sqpoll": sum(r.stats.cpu_seconds_sqpoll
                               for r in rings),
+            "attribution": attr,
         }
 
     def _checkpointer(self, counter, n_txns: int) -> Generator:

@@ -1,0 +1,358 @@
+"""Kernel-cost attribution, ring/fiber tracing, and the guidelines
+advisor (the observability PR):
+
+* conservation — every charged CPU second lands in exactly one
+  attribution category, so the per-category sum equals
+  ``cpu_seconds_app + cpu_seconds_sqpoll`` to 1e-9, on all four
+  subsystem smokes (WAL, shuffle, TPC-C, replication);
+* zero observer effect — installing a tracer changes no virtual
+  timestamp and no measured number;
+* the trace is valid Chrome trace-event JSON with labeled fiber/core
+  tracks (wal-leader et al.) and per-ring kernel instants;
+* the advisor recommends, for each deliberately-bad configuration,
+  the design-ladder rung the committed BENCH snapshots show winning;
+* CQE timestamps are real on the inline path (no zero-latency CQEs in
+  multi-core mode) and per-op-class histograms aggregate them;
+* ``multishot_recv_cqes`` is recv-only and ZC_NOTIF CQEs are counted
+  apart from data CQEs.
+"""
+
+import math
+
+from dataclasses import replace
+
+from repro.core import (CqeFlags, IoUring, NICSpec, NVMeSpec, SetupFlags,
+                        SimNVMe, SimNetwork, SimSocket, SqeFlags, Timeline)
+from repro.core import ring as R
+from repro.observe import (diagnose, report_from_result, report_from_stats,
+                           trace as otrace)
+from repro.replication import ReplicatedCluster
+from repro.shuffle import ShuffleConfig
+from repro.shuffle.engine import ShuffleEngine
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import TPCCLite, ycsb_update_txn
+
+MiB = 1 << 20
+EPS = 1e-9
+
+
+def make_socket_rings(setup=SetupFlags.DEFER_TASKRUN |
+                      SetupFlags.SINGLE_ISSUER):
+    tl = Timeline()
+    net = SimNetwork(tl, 2, NICSpec())
+    sa, sb = SimSocket.pair(net, 0, 1)
+    ra, rb = IoUring(tl, setup=setup), IoUring(tl, setup=setup)
+    ra.register_device(4, sa)
+    rb.register_device(4, sb)
+    return tl, ra, rb
+
+
+def assert_conserved(attribution, cpu_seconds):
+    total = sum(attribution.values())
+    assert abs(total - cpu_seconds) < EPS, \
+        f"attributed {total!r} != charged {cpu_seconds!r}"
+
+
+# ------------------------------------------------------- conservation
+
+def test_conservation_wal_group_commit():
+    cfg = EngineConfig("+GroupCommit", n_fibers=32, pool_frames=512,
+                       batch_evict=True, adaptive_batch=True,
+                       fixed_bufs=True, durability="group")
+    eng = StorageEngine(cfg, n_tuples=5000,
+                        spec=NVMeSpec(plp=True, fsync_lat=30e-6))
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    assert_conserved(res["attribution"],
+                     res["app_cpu_s"] + res["sqpoll_cpu_s"])
+    assert res["attribution"]  # non-trivial breakdown
+
+
+def test_conservation_shuffle_engine():
+    e = ShuffleEngine(ShuffleConfig(
+        tuple_size=512, n_nodes=3, n_workers=4,
+        total_bytes_per_node=2 * MiB)).run()
+    assert_conserved(e["attribution"],
+                     e["app_cpu_s"] + e["sqpoll_cpu_s"])
+    assert e["attribution"].get("sock_submit", 0.0) > 0.0
+
+
+def test_conservation_tpcc_single_core():
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    cfg = replace(ladder["+BatchSubmit"], pool_frames=1024)
+    eng = StorageEngine(cfg, n_tuples=TPCCLite.ITEMS_PER_WH +
+                        TPCCLite.CUST_PER_WH + 100)
+    tp = TPCCLite(eng, 1)
+    res = eng.run_fibers(lambda rng: tp.txn(rng), 64)
+    assert_conserved(res["attribution"],
+                     res["app_cpu_s"] + res["sqpoll_cpu_s"])
+
+
+def test_conservation_replication_async():
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    cfg = replace(ladder["+AsyncRepl"], n_fibers=16, pool_frames=512)
+    cl = ReplicatedCluster(cfg, n_tuples=5000,
+                           spec=NVMeSpec(plp=True, fsync_lat=30e-6))
+    e = cl.primary
+    res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng), 96)
+    assert_conserved(res["attribution"],
+                     res["app_cpu_s"] + res["sqpoll_cpu_s"])
+
+
+def test_conservation_on_raw_ring_stats():
+    """The invariant holds at the RingStats level too, and the merged
+    report preserves it."""
+    tl = Timeline()
+    ring = IoUring(tl)
+    ring.register_device(3, SimNVMe(tl, NVMeSpec()))
+    for i in range(16):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(16)
+    st = ring.stats
+    assert abs(st.attributed_seconds() -
+               (st.cpu_seconds_app + st.cpu_seconds_sqpoll)) < EPS
+    rep = report_from_stats([st])
+    assert abs(sum(rep.attribution.values()) - rep.cpu_seconds) < EPS
+
+
+# -------------------------------------------------- tracing semantics
+
+def _mini_wal_engine():
+    # multi-core so the DEDICATED group-commit leader fiber exists
+    # (single-core group commit elects a committer inline instead)
+    cfg = replace(EngineConfig.multicore(2, durability="group",
+                                         fixed_bufs=True),
+                  n_fibers=16, pool_frames=256)
+    eng = StorageEngine(cfg, n_tuples=2000,
+                        spec=NVMeSpec(plp=True, fsync_lat=30e-6))
+    return eng.run_fibers(
+        lambda rng, e=eng: ycsb_update_txn(e, rng), 64)
+
+
+def test_tracing_has_zero_observer_effect():
+    base = _mini_wal_engine()
+    tr = otrace.Tracer()
+    otrace.install(tr)
+    try:
+        traced = _mini_wal_engine()
+    finally:
+        otrace.uninstall()
+    assert otrace.current() is None
+    assert len(tr.events) > 0
+    # bit-identical virtual time and measurements: the tracer only
+    # READS clocks, it never charges
+    for key in ("tps", "app_cpu_s", "sqpoll_cpu_s", "enters",
+                "commit_wait_us", "fsyncs"):
+        assert traced[key] == base[key], key
+    assert traced["attribution"] == base["attribution"]
+
+
+def test_trace_is_valid_chrome_trace_event_json():
+    tr = otrace.Tracer()
+    otrace.install(tr)
+    try:
+        _mini_wal_engine()
+    finally:
+        otrace.uninstall()
+    doc = tr.to_chrome()
+    assert set(doc) >= {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    assert evs
+    for e in evs:
+        assert e["ph"] in ("X", "i", "M")
+        assert isinstance(e["pid"], int)
+        if e["ph"] != "M":
+            assert e["ts"] >= 0.0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    # labeled tracks: the group-commit leader fiber is named, core
+    # threads and ring processes carry metadata
+    slices = {e["name"] for e in evs if e["ph"] == "X"}
+    assert "wal-leader" in slices
+    assert any(s.startswith("txn-worker") for s in slices)
+    threads = {e["args"]["name"] for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "cores/fibers" in procs
+    assert any(p.startswith("ring") for p in procs)
+    assert threads
+    # kernel instants: submissions and reaps per op class
+    instants = {e["name"] for e in evs if e["ph"] == "i"}
+    assert "enter" in instants
+    assert "sqe:write" in instants and "sqe:fsync" in instants
+    assert "cqe" in instants
+
+
+def test_trace_event_cap_sets_truncated():
+    tr = otrace.Tracer(max_events=10)
+    otrace.install(tr)
+    try:
+        _mini_wal_engine()
+    finally:
+        otrace.uninstall()
+    assert tr.truncated
+    assert len(tr.events) <= 10 + 64       # metadata rows may follow
+    assert tr.to_chrome()["otherData"]["truncated"] is True
+
+
+# ----------------------------------------------------------- advisor
+
+def test_advisor_flags_shared_ring_as_top_finding():
+    """4 cores on ONE contended ring: the advisor's #1 recommendation
+    must be ring-per-core (+MultiCore(N)) — the rung the committed
+    fig6 scale-up snapshots show winning."""
+    cfg = replace(EngineConfig.multicore(4, shared_ring=True),
+                  n_fibers=64, pool_frames=512)
+    eng = StorageEngine(cfg, n_tuples=5000)
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    findings = diagnose(report_from_result(res))
+    assert findings
+    assert findings[0].rule == "shared-ring-lock"
+    assert findings[0].rung == "+MultiCore(N)"
+    # the IPI symptom of default-mode completions rides along
+    assert any(f.rule == "ipi-completions" for f in findings)
+    # ...and the fix clears it: same cores, ring per core
+    cfg = replace(EngineConfig.multicore(4), n_fibers=64,
+                  pool_frames=512)
+    eng = StorageEngine(cfg, n_tuples=5000)
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    rules = {f.rule for f in diagnose(report_from_result(res))}
+    assert "shared-ring-lock" not in rules
+    assert "ipi-completions" not in rules
+
+
+def test_advisor_flags_copied_big_sends():
+    """64 KiB copied sends: bounce_copy dominates and the advisor says
+    SEND_ZC; the zero-copy run of the same traffic is clean."""
+    def sender(zc):
+        tl, ra, rb = make_socket_rings()
+        for i in range(8):
+            sqe = ra.get_sqe()
+            R.prep_send(sqe, 4, 64 * 1024, user_data=i, zero_copy=zc)
+            ra.submit()
+            ra.wait_cqes(2 if zc else 1)
+        return ra.stats
+    findings = diagnose(report_from_stats([sender(False)]))
+    top = {f.rule: f for f in findings}
+    assert "copied-big-sends" in top
+    assert top["copied-big-sends"].rung == "+zc_send"
+    rules = {f.rule for f in diagnose(report_from_stats([sender(True)]))}
+    assert "copied-big-sends" not in rules
+
+
+def test_advisor_flags_per_op_submission():
+    """One SQE per io_uring_enter: the advisor recommends batched
+    submission (+BatchSubmit, the fig5 rung)."""
+    tl = Timeline()
+    ring = IoUring(tl)
+    ring.register_device(3, SimNVMe(tl, NVMeSpec()))
+    for i in range(32):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+        ring.submit()            # per-op enter: the anti-pattern
+        ring.wait_cqe()
+    findings = diagnose(report_from_stats([ring.stats]))
+    by_rule = {f.rule: f for f in findings}
+    assert "unbatched-submission" in by_rule
+    assert by_rule["unbatched-submission"].rung == "+BatchSubmit"
+    # batched control: 32 SQEs, one enter
+    tl = Timeline()
+    ring = IoUring(tl)
+    ring.register_device(3, SimNVMe(tl, NVMeSpec()))
+    for i in range(32):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(32)
+    rules = {f.rule for f in diagnose(report_from_stats([ring.stats]))}
+    assert "unbatched-submission" not in rules
+
+
+def test_advisor_flags_worker_fallbacks_on_plain_fsync():
+    """+WAL (write + plain fsync) pushes every fsync to io-workers; the
+    advisor points at the linked/passthrough rungs (GL3)."""
+    cfg = EngineConfig("+WAL", n_fibers=32, pool_frames=512,
+                       batch_evict=True, adaptive_batch=True,
+                       durability="wal")
+    eng = StorageEngine(cfg, n_tuples=5000,
+                        spec=NVMeSpec(plp=True, fsync_lat=30e-6))
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    assert res["worker_fallbacks"] > 0
+    by_rule = {f.rule: f for f in diagnose(report_from_result(res))}
+    assert "worker-fallbacks" in by_rule
+    assert by_rule["worker-fallbacks"].rung == "+GroupCommit/+PassthruFlush"
+
+
+def test_advisor_str_names_rule_rung_guideline():
+    rep = report_from_stats([])
+    rep.attribution = {"ring_lock": 1.0}
+    f = diagnose(rep)[0]
+    s = str(f)
+    assert "shared-ring-lock" in s and "+MultiCore(N)" in s
+
+
+# -------------------------------------- latency histograms & counters
+
+def test_inline_cqe_latency_positive_in_multicore_mode():
+    """Satellite (a): mc-mode charges advance core horizons, not the
+    timeline — CQE timestamps must still span the op (no zero-latency
+    reads) and feed per-op-class histograms."""
+    cfg = replace(EngineConfig.multicore(2), n_fibers=32,
+                  pool_frames=512)
+    eng = StorageEngine(cfg, n_tuples=5000)
+    eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 64)
+    lat = [r.stats.lat for r in eng._own_rings if "read" in r.stats.lat]
+    assert lat, "no read latency histograms recorded"
+    for h in lat:
+        assert h["read"].n > 0
+        assert h["read"].p50() > 0.0
+        assert h["read"].p99() >= h["read"].p50()
+
+
+def test_latency_summary_per_op_class():
+    tl = Timeline()
+    ring = IoUring(tl)
+    ring.register_device(3, SimNVMe(tl, NVMeSpec()))
+    for i in range(8):
+        sqe = ring.get_sqe()
+        R.prep_read(sqe, 3, bytearray(4096), i * 4096, 4096, user_data=i)
+    ring.submit()
+    ring.wait_cqes(8)
+    summ = ring.stats.latency_summary()
+    assert "read" in summ
+    assert summ["read"]["n"] == 8
+    # ~70 us device read; p50 in a sane band around it
+    assert 20.0 < summ["read"]["p50_us"] < 400.0
+    assert summ["read"]["p99_us"] >= summ["read"]["p50_us"]
+
+
+def test_zc_notif_counted_apart_from_data_cqes():
+    tl, ra, rb = make_socket_rings()
+    for i in range(4):
+        sqe = ra.get_sqe()
+        R.prep_send(sqe, 4, 1 << 20, user_data=i, zero_copy=True)
+        ra.submit()
+        ra.wait_cqes(2)
+    st = ra.stats
+    assert st.cqes_reaped == 8
+    assert st.zc_notif_cqes_reaped == 4
+    assert st.data_cqes_reaped == 4
+    # SEND_ZC's MORE-flagged completion is NOT a multishot recv
+    assert st.multishot_recv_cqes == 0
+    # notif latencies live in their own class, not under "send"
+    assert st.lat["zc_notif"].n == 4
+    assert st.lat["send"].n == 4
+
+
+def test_lat_hist_percentile_math():
+    from repro.core import LatHist
+    h = LatHist()
+    for v in (1e-6,) * 90 + (1e-3,) * 10:
+        h.record(v)
+    assert h.n == 100
+    assert math.isclose(h.p50(), 1e-6, rel_tol=0.5)
+    assert h.p99() > 1e-4
+    h.record(-1.0)          # clamped, never throws
+    assert h.n == 101

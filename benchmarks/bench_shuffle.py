@@ -105,12 +105,14 @@ def run(total=192 * MiB, smoke=False):
              f"oracle={o['egress_gib_per_node']:.2f} "
              f"syscalls={e['syscalls']}")
 
-    # the known oracle blind spot (ROADMAP): extreme fan-in at 6 nodes x
-    # 32 workers with probe-bound tuples — the closed form misses the
-    # receive-side queueing feedback that builds once flows are long,
-    # and overestimates egress by ~25-35%.  Emitted into the --json
-    # snapshot so the gap is tracked per PR; the [0.68, 0.82] band is
-    # pinned in tests/test_shuffle.py to catch regressions either way.
+    # formerly the oracle's blind spot (ROADMAP gap (a), now closed):
+    # extreme fan-in at 6 nodes x 32 workers with probe-bound tuples.
+    # ShuffleSim now models the receive-side queueing feedback that
+    # builds once flows outgrow the provided-buffer ring (exhaustion
+    # drain, bounded sender socket buffer, fiber-burst memory-meter
+    # convoy), so this ratio sits at ~1.0 like the 3-node cases above.
+    # Emitted into the --json snapshot so agreement is tracked per PR;
+    # the [0.95, 1.05] band is pinned in tests/test_shuffle.py.
     if not smoke:
         kw = dict(tuple_size=512, n_nodes=6, n_workers=32,
                   total_bytes_per_node=48 * MiB)

@@ -1,0 +1,108 @@
+"""Open-loop SLO benches (repro.observe.slo): tail latency vs offered
+load, against declared SLOs.
+
+The closed-loop benches elsewhere measure capacity; these measure what
+a CLIENT sees when arrivals are open-loop Poisson and the engine must
+keep up or shed.  Two workloads, each swept over offered rates from
+comfortable to past saturation:
+
+  slo/tpcc   TPC-C-lite mix on the durable single-node engine
+             (+GroupCommit).  SLO: p99 <= 10 ms, p999 <= 25 ms.
+
+  slo/repl   YCSB updates on a semisync replicated cluster — every
+             commit waits for the standby's WAL-durable ack, so the
+             network round trip sits inside the measured latency.
+             SLO: p99 <= 15 ms, p999 <= 40 ms.
+
+Rows per (workload, rate): p50/p99/p999/mean arrival-to-completion
+latency (queue wait included — no coordinated omission), achieved
+throughput, drop count/fraction at the bounded arrival queue, and a
+0/1 ``slo_met`` verdict.  The declared SLO is echoed as its own row so
+a snapshot is self-contained.  All of it lands in ``BENCH_pr*.json``
+and is watched by ``scripts/bench_diff.py``.
+"""
+
+from dataclasses import replace
+
+from benchmarks.common import emit, section
+from repro.core import NVMeSpec
+from repro.observe import slo
+from repro.replication import ReplicatedCluster
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import TPCCLite, ycsb_update_txn
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+
+LADDER = {c.name: c for c in EngineConfig.ladder()}
+
+#: offered rates (txn/s): comfortable, busy, past saturation (closed-
+#: loop capacity is ~150k tps for the TPC-C engine, ~90k acked for the
+#: semisync cluster — the top rate overloads both, so the sweep shows
+#: the queueing knee and the shed path).  The same rates run in smoke
+#: mode (shorter duration, smaller engine) so row names line up across
+#: smoke and full snapshots.
+TPCC_RATES = (10_000, 50_000, 200_000)
+REPL_RATES = (10_000, 50_000, 150_000)
+
+TPCC_SLO = dict(slo_p99_us=10_000.0, slo_p999_us=25_000.0)
+REPL_SLO = dict(slo_p99_us=15_000.0, slo_p999_us=40_000.0)
+
+
+def _emit_rows(prefix: str, rows, slo_cfg) -> None:
+    for r in rows:
+        base = f"{prefix}/rate={r['rate_tps']:.0f}"
+        note = (f"offered={r['offered']} completed={r['completed']} "
+                f"achieved={r['achieved_tps']:.0f}/s")
+        emit(f"{base}/p50_us", round(r["p50_us"], 1))
+        emit(f"{base}/p99_us", round(r["p99_us"], 1),
+             f"slo={slo_cfg['slo_p99_us']:.0f}us")
+        emit(f"{base}/p999_us", round(r["p999_us"], 1),
+             f"slo={slo_cfg['slo_p999_us']:.0f}us")
+        emit(f"{base}/mean_us", round(r["mean_us"], 1))
+        emit(f"{base}/achieved_tps", round(r["achieved_tps"]), note)
+        emit(f"{base}/dropped", r["dropped"],
+             f"of {r['offered']} offered (bounded arrival queue)")
+        emit(f"{base}/drop_frac", round(r["drop_frac"], 4))
+        emit(f"{base}/slo_met", int(r["slo_met"]),
+             "1 = p99/p999 within SLO and <1% shed")
+    emit(f"{prefix}/slo_p99_us", slo_cfg["slo_p99_us"], "declared")
+    emit(f"{prefix}/slo_p999_us", slo_cfg["slo_p999_us"], "declared")
+
+
+def run(duration_s: float = 0.25, n_tuples: int = 20_000,
+        n_workers: int = 64):
+    section("open-loop TPC-C vs SLO (slo/tpcc)")
+    W = 1
+
+    def mk_tpcc():
+        cfg = replace(LADDER["+GroupCommit"], n_fibers=n_workers,
+                      pool_frames=4096)
+        rows = W * (TPCCLite.ITEMS_PER_WH + TPCCLite.CUST_PER_WH)
+        return StorageEngine(cfg, n_tuples=rows + 100,
+                             spec=NVMeSpec(**ENTERPRISE))
+
+    def tpcc_txn_for(engine):
+        tp = TPCCLite(engine, W)
+        return lambda rng: tp.txn(rng)
+
+    rows = slo.sweep(mk_tpcc, tpcc_txn_for, rates=list(TPCC_RATES),
+                     duration_s=duration_s, n_workers=n_workers,
+                     **TPCC_SLO)
+    _emit_rows("slo/tpcc", rows, TPCC_SLO)
+
+    section("open-loop replicated YCSB vs SLO (slo/repl)")
+
+    def mk_repl():
+        cfg = replace(LADDER["+SemiSync"], n_fibers=n_workers,
+                      pool_frames=1024)
+        return ReplicatedCluster(cfg, n_tuples=n_tuples,
+                                 spec=NVMeSpec(**ENTERPRISE))
+
+    def repl_txn_for(cluster):
+        eng = cluster.primary
+        return lambda rng: ycsb_update_txn(eng, rng)
+
+    rows = slo.sweep(mk_repl, repl_txn_for, rates=list(REPL_RATES),
+                     duration_s=duration_s, n_workers=n_workers,
+                     **REPL_SLO)
+    _emit_rows("slo/repl", rows, REPL_SLO)

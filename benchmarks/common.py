@@ -1,8 +1,157 @@
-"""Shared helpers: CSV row emission in `name,value,derived` format."""
+"""Shared helpers: CSV row emission in `name,value,derived` format,
+plus the versioned BENCH schema that makes snapshots comparable
+across PRs.
+
+Row names follow the grammar ``<section>/<params...>/<leaf>``: the
+first component is the module's section key, middle components are
+free-form parameters (``fibers=32``, config names), and the METRIC is
+the last component that is not a ``key=value`` pair.  ``attr/<cat>``
+and ``diagnosis/<rule>`` are two-component leaves.  ``LEAF_SPECS``
+registers every legal leaf with its unit, direction (higher-is-better)
+and — for the regression gate in ``scripts/bench_diff.py`` — whether a
+smoke-sized re-run is comparable to a committed full-size snapshot and
+the tolerance band for that comparison.  ``benchmarks/run.py --json``
+embeds ``schema_block()`` so every snapshot self-describes, and
+``validate_rows`` is what ``bench_diff.py --strict-schema`` runs over
+each committed ``BENCH_pr*.json``."""
 
 from __future__ import annotations
 
+from dataclasses import asdict, dataclass
+from typing import List, Optional
+
 ROWS = []
+
+#: bump when a leaf's meaning/unit changes or the name grammar moves;
+#: pre-existing snapshots without the field are treated as version 0
+#: (same grammar, no embedded spec table)
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    unit: str                 #: physical unit of the row value
+    hib: Optional[bool]       #: higher is better; None = neutral
+    comparable: bool          #: smoke re-run vs committed full run is
+                              #: meaningful for the SAME row name
+    band: float = 0.0         #: allowed x-factor drift when comparable
+    kind: str = "number"      #: "number" | "string"
+
+
+def _m(unit, hib, comparable, band=0.0, kind="number"):
+    return MetricSpec(unit, hib, comparable, band, kind)
+
+
+#: every metric leaf that may appear in a snapshot.  Bands are
+#: deliberately generous: smoke runs shrink txn counts and durations,
+#: so only order-of-magnitude regressions should trip the gate —
+#: anything tighter flakes (rates and latencies at tiny sizes sit
+#: within ~2-3x of the full run; the log2 latency buckets alone
+#: quantize at ~2x).
+LEAF_SPECS = {
+    # throughput / bandwidth
+    "tps":              _m("txn/s", True, True, 5.0),
+    "achieved_tps":     _m("txn/s", True, True, 5.0),
+    "miops":            _m("Miops", True, True, 4.0),
+    "gib_s":            _m("GiB/s", True, True, 4.0),
+    "mem_gib_s":        _m("GiB/s", False, True, 4.0),
+    "cycles_per_byte":  _m("cyc/B", False, True, 4.0),
+    "cycles_per_op":    _m("cyc/op", False, True, 4.0),
+    # latency
+    "commit_us":        _m("us", False, True, 5.0),
+    "lat_us":           _m("us", False, True, 5.0),
+    "rtt_us":           _m("us", False, True, 4.0),
+    "p50_us":           _m("us", False, True, 5.0),
+    "p99_us":           _m("us", False, True, 5.0),
+    "p999_us":          _m("us", False, True, 5.0),
+    "mean_us":          _m("us", False, True, 5.0),
+    # ratios / efficiency
+    "speedup":            _m("x", True, True, 3.0),
+    "group":              _m("txn/flush", True, True, 4.0),
+    "fsyncs_per_txn":     _m("fsync/txn", False, True, 4.0),
+    "engine_over_oracle": _m("x", None, True, 1.6),
+    "zc_cpu_win_pct":     _m("%", True, False),
+    "recv_cpu_saving":    _m("%", True, False),
+    "drop_frac":          _m("frac", False, False),
+    "slo_met":            _m("bool", True, False),
+    # declared SLO constants (parameters echoed as rows)
+    "slo_p99_us":       _m("us", None, False),
+    "slo_p999_us":      _m("us", None, False),
+    # absolute work done (scales with run size: never smoke-compared)
+    "offered":          _m("txn", None, False),
+    "completed":        _m("txn", None, False),
+    "dropped":          _m("txn", False, False),
+    "cpu_s":            _m("s", False, False),
+    "runtime_s":        _m("s", False, False),
+    "bound_s":          _m("s", False, False),
+    "mean_apply_lag_b": _m("bytes", False, False),
+    "missing":          _m("count", None, False),
+    "skipped":          _m("count", None, False),
+    # kernel-cost attribution (microseconds; scales with run size)
+    "attr/total":       _m("us", False, False),
+    "attr/<cat>":       _m("us", False, False),
+    # advisor output (strings)
+    "diagnosis":        _m("", None, False, kind="string"),
+    "diagnosis/<rule>": _m("", None, False, kind="string"),
+}
+
+
+def leaf_of(name: str) -> Optional[str]:
+    """Resolve a row name to its LEAF_SPECS key, or None if the name
+    fits no registered leaf."""
+    parts = name.split("/")
+    if len(parts) < 2 or any(not p for p in parts):
+        return None
+    if parts[-1] == "diagnosis":
+        return "diagnosis"
+    if len(parts) >= 3 and parts[-2] == "diagnosis":
+        return "diagnosis/<rule>"
+    if len(parts) >= 3 and parts[-2] == "attr":
+        return "attr/total" if parts[-1] == "total" else "attr/<cat>"
+    # the metric is the last component that is not a key=value param
+    for p in reversed(parts[1:]):
+        if "=" not in p:
+            return p if p in LEAF_SPECS else None
+    return None
+
+
+def spec_for(name: str) -> Optional[MetricSpec]:
+    leaf = leaf_of(name)
+    return LEAF_SPECS.get(leaf) if leaf else None
+
+
+def validate_rows(rows) -> List[str]:
+    """Schema check over ``[{name, value, derived}]`` rows (or
+    ``(name, value, derived)`` tuples).  Returns a list of problems —
+    empty means the snapshot conforms."""
+    import math
+    problems = []
+    for i, r in enumerate(rows):
+        name, value = (r["name"], r["value"]) if isinstance(r, dict) \
+            else (r[0], r[1])
+        spec = spec_for(name)
+        if spec is None:
+            problems.append(f"row {i}: {name!r}: unregistered leaf "
+                            f"(add it to benchmarks.common.LEAF_SPECS)")
+            continue
+        if spec.kind == "string":
+            if not isinstance(value, str):
+                problems.append(f"row {i}: {name!r}: expected a string, "
+                                f"got {value!r}")
+        elif not isinstance(value, (int, float)) \
+                or isinstance(value, bool) or not math.isfinite(value):
+            problems.append(f"row {i}: {name!r}: expected a finite "
+                            f"number, got {value!r}")
+    return problems
+
+
+def schema_block() -> dict:
+    """The self-describing schema embedded in ``--json`` output."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "name_grammar": "<section>/<params...>/<leaf>",
+        "leaves": {k: asdict(v) for k, v in sorted(LEAF_SPECS.items())},
+    }
 
 
 def emit(name: str, value, derived: str = "") -> None:

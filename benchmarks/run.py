@@ -34,6 +34,7 @@ MODULES = [
     ("fig11-14", "benchmarks.bench_shuffle"),
     ("fig15-16", "benchmarks.bench_sendrecv"),
     ("fig17", "benchmarks.bench_guidelines"),
+    ("slo", "benchmarks.bench_slo"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
@@ -41,12 +42,18 @@ MODULES = [
 #: enough to run with their defaults (a few seconds each)
 SMOKE_KW = {
     "fig5": {"n_txns": 120},
-    "fig6": {"n_txns": 60, "core_counts": (1, 2)},
+    # fig6 needs enough txns that warmup doesn't dominate tps — the
+    # regression gate compares these values against the committed
+    # full-size snapshot (scripts/bench_diff.py tolerance bands)
+    "fig6": {"n_txns": 300, "core_counts": (1, 2)},
     "fig7": {"n_txns": 120, "core_counts": (1, 2)},
     "fig9wal": {"n_txns": 96},
     "repl": {"n_txns": 96},
     "fig11-14": {"smoke": True},
     "fig17": {"n_txns": 120},
+    # SAME offered rates as the full run (row names must line up for
+    # bench_diff), just a shorter window and a smaller table
+    "slo": {"duration_s": 0.04, "n_tuples": 8_000},
 }
 
 
@@ -62,16 +69,25 @@ def main() -> None:
                     help="record a ring/fiber event trace of the run and "
                          "write it as Chrome trace-event JSON (open in "
                          "Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="sample the opt-in time-series telemetry "
+                         "(repro.observe.metrics) during the run and "
+                         "dump every series to PATH as JSON")
     args = ap.parse_args()
     only = set(k for k in args.only.split(",") if k)
 
     import importlib
-    from benchmarks.common import ROWS
+    from benchmarks.common import ROWS, SCHEMA_VERSION, schema_block
     tracer = None
     if args.trace:
         from repro.observe import trace as _trace
         tracer = _trace.Tracer()
         _trace.install(tracer)
+    mreg = None
+    if args.metrics:
+        from repro.observe import metrics as _metrics
+        mreg = _metrics.MetricsRegistry()
+        _metrics.install(mreg)
     t00 = time.time()
     timings = {}
     try:
@@ -88,17 +104,28 @@ def main() -> None:
         if tracer is not None:
             from repro.observe import trace as _trace
             _trace.uninstall()
+        if mreg is not None:
+            from repro.observe import metrics as _metrics
+            _metrics.uninstall()
     print(f"# all benchmarks done in {time.time()-t00:.1f}s", flush=True)
     if tracer is not None:
         tracer.write(args.trace)
         extra = " (truncated)" if tracer.truncated else ""
         print(f"# wrote {len(tracer.events)} trace events to "
               f"{args.trace}{extra}", flush=True)
+    if mreg is not None:
+        mreg.write(args.metrics)
+        extra = " (truncated)" if mreg.truncated else ""
+        print(f"# wrote {len(mreg.series)} metric series "
+              f"({mreg.ticks} ticks) to {args.metrics}{extra}",
+              flush=True)
     if args.json:
         payload = {
             "meta": {"smoke": args.smoke, "only": sorted(only),
                      "module_seconds": timings,
                      "elapsed_s": round(time.time() - t00, 1)},
+            "schema_version": SCHEMA_VERSION,
+            "schema": schema_block(),
             "rows": [{"name": n, "value": v, "derived": d}
                      for n, v, d in ROWS],
         }

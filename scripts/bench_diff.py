@@ -1,0 +1,226 @@
+"""Cross-PR bench regression gate.
+
+Compares a freshly generated snapshot (normally the smoke run that
+scripts/check.sh just produced under ``.bench/``) against the NEWEST
+committed ``BENCH_pr*.json`` and fails — exit code 1 — when
+
+* a numeric metric that the schema marks *comparable* moved outside
+  its per-leaf tolerance band in the bad direction (bands live in
+  ``benchmarks.common.LEAF_SPECS``; smoke sizes sit well inside them,
+  so a trip means an order-of-magnitude regression, not noise);
+* a section present in the committed snapshot vanished from the fresh
+  run (a bench module stopped emitting);
+* either snapshot contains a row whose name does not resolve to a
+  registered schema leaf (schema-key drift: someone renamed or added
+  a metric without registering it).
+
+Modes:
+
+  python scripts/bench_diff.py --fresh .bench/BENCH_smoke.json
+      gate the fresh snapshot against the newest committed one
+
+  python scripts/bench_diff.py --strict-schema
+      validate EVERY committed BENCH_pr*.json against the schema
+      (pre-schema snapshots are accepted as version 0 but their row
+      names must still resolve)
+
+  python scripts/bench_diff.py --trajectory
+      print the metric trajectory table across all committed
+      snapshots (rows present in 2+ snapshots, newest last), flagging
+      out-of-band moves between consecutive PRs
+
+Exit codes: 0 clean, 1 regression/drift found, 2 usage or I/O error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import (SCHEMA_VERSION, spec_for,  # noqa: E402
+                               validate_rows)
+
+
+def _load(path):
+    with open(path) as f:
+        d = json.load(f)
+    rows = {r["name"]: r["value"] for r in d["rows"]}
+    return d, rows
+
+
+def committed_snapshots(repo=_ROOT):
+    """Committed BENCH_pr*.json paths, oldest first."""
+    def key(p):
+        m = re.search(r"BENCH_pr(\d+)\.json$", p)
+        return int(m.group(1)) if m else -1
+    return sorted(glob.glob(os.path.join(repo, "BENCH_pr*.json")),
+                  key=key)
+
+
+def check_schema(path, problems):
+    d, rows = _load(path)
+    ver = d.get("schema_version", 0)
+    if ver not in (0, SCHEMA_VERSION):
+        problems.append(f"{path}: schema_version {ver} != "
+                        f"{SCHEMA_VERSION} (and not pre-schema 0)")
+    for p in validate_rows(d["rows"]):
+        problems.append(f"{path}: {p}")
+    return d, rows
+
+
+def gate(fresh_path, committed_path):
+    """The regression gate.  Returns a list of failures (empty = ok)."""
+    failures = []
+    fd, fresh = check_schema(fresh_path, failures)
+    cd, committed = check_schema(committed_path, failures)
+
+    fresh_secs = {n.split("/")[0] for n in fresh}
+    lost = {n.split("/")[0] for n in committed} - fresh_secs
+    for sec in sorted(lost):
+        failures.append(f"section {sec!r} present in {committed_path} "
+                        f"but missing from the fresh run")
+
+    common = sorted(set(fresh) & set(committed))
+    n_checked = 0
+    for name in common:
+        spec = spec_for(name)
+        if spec is None or not spec.comparable or spec.kind == "string":
+            continue
+        old, new = committed[name], fresh[name]
+        if not isinstance(old, (int, float)) \
+                or not isinstance(new, (int, float)):
+            continue
+        if old == 0 or new == 0:
+            # a genuine zero (e.g. an idle counter) has no meaningful
+            # ratio; absolute regressions on such rows show up through
+            # the metrics that are derived from them
+            continue
+        n_checked += 1
+        ratio = new / old
+        bad = None
+        if spec.hib is True and ratio < 1.0 / spec.band:
+            bad = f"dropped to {ratio:.2f}x (floor 1/{spec.band:g})"
+        elif spec.hib is False and ratio > spec.band:
+            bad = f"grew to {ratio:.2f}x (ceiling {spec.band:g}x)"
+        elif spec.hib is None and not (1.0 / spec.band <= ratio
+                                       <= spec.band):
+            bad = f"drifted to {ratio:.2f}x (band 1/{spec.band:g}.." \
+                  f"{spec.band:g}x)"
+        if bad:
+            failures.append(f"{name}: {old} -> {new} {bad}")
+    print(f"# bench_diff: {len(common)} common rows, {n_checked} "
+          f"gated against {os.path.basename(committed_path)}, "
+          f"{len(failures)} failure(s)")
+    return failures
+
+
+def trajectory(paths, out=sys.stdout):
+    """Metric trajectory across committed snapshots: every row present
+    in 2+ snapshots, one column per PR, out-of-band consecutive moves
+    flagged with '!'."""
+    snaps = []
+    for p in paths:
+        _, rows = _load(p)
+        tag = re.search(r"(pr\d+)", os.path.basename(p))
+        snaps.append((tag.group(1) if tag else os.path.basename(p),
+                      rows))
+    names = {}
+    for tag, rows in snaps:
+        for n in rows:
+            names.setdefault(n, set()).add(tag)
+    multi = sorted(n for n, tags in names.items() if len(tags) >= 2)
+    tags = [t for t, _ in snaps]
+    out.write("metric" + "".join(f"\t{t}" for t in tags) + "\n")
+    n_flag = 0
+    for name in multi:
+        spec = spec_for(name)
+        cells, prev, flagged = [], None, False
+        for _, rows in snaps:
+            v = rows.get(name)
+            cell = "-" if v is None else \
+                (v if isinstance(v, str) else f"{v:g}")
+            if isinstance(v, (int, float)) and \
+                    isinstance(prev, (int, float)) and prev and \
+                    spec and spec.comparable and spec.band:
+                r = v / prev
+                if not (1.0 / spec.band <= r <= spec.band):
+                    cell += "!"
+                    flagged = True
+            cells.append(cell)
+            if v is not None:
+                prev = v
+        n_flag += flagged
+        out.write(name + "".join(f"\t{c}" for c in cells) + "\n")
+    out.write(f"# {len(multi)} tracked rows across "
+              f"{len(snaps)} snapshots, {n_flag} with out-of-band "
+              f"moves\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="BENCH snapshot regression gate / schema check")
+    ap.add_argument("--fresh", default="",
+                    help="fresh snapshot to gate against the newest "
+                         "committed BENCH_pr*.json")
+    ap.add_argument("--committed", default="",
+                    help="override the committed snapshot to gate "
+                         "against (default: newest BENCH_pr*.json)")
+    ap.add_argument("--repo", default=_ROOT,
+                    help="repo root holding BENCH_pr*.json")
+    ap.add_argument("--strict-schema", action="store_true",
+                    help="validate every committed BENCH_pr*.json")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="print the cross-PR metric trajectory table")
+    args = ap.parse_args(argv)
+    if not (args.fresh or args.strict_schema or args.trajectory):
+        ap.error("nothing to do: pass --fresh, --strict-schema "
+                 "and/or --trajectory")
+
+    paths = committed_snapshots(args.repo)
+    if not paths:
+        print("bench_diff: no committed BENCH_pr*.json found",
+              file=sys.stderr)
+        return 2
+    rc = 0
+
+    if args.strict_schema:
+        problems = []
+        for p in paths:
+            check_schema(p, problems)
+        if problems:
+            rc = 1
+            for p in problems:
+                print(f"SCHEMA: {p}", file=sys.stderr)
+        print(f"# bench_diff: strict schema over {len(paths)} "
+              f"snapshot(s): {len(problems)} problem(s)")
+
+    if args.fresh:
+        committed = args.committed or paths[-1]
+        try:
+            failures = gate(args.fresh, committed)
+        except (OSError, KeyError, ValueError) as e:
+            print(f"bench_diff: cannot compare: {e}", file=sys.stderr)
+            return 2
+        if failures:
+            rc = 1
+            for f in failures:
+                print(f"REGRESSION: {f}", file=sys.stderr)
+
+    if args.trajectory:
+        trajectory(paths)
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,21 +4,26 @@
 #   2. a fast-mode benchmark smoke (tiny sizes) so bench modules can't
 #      silently rot — every paper-figure module must import and run,
 #      and the machine-readable snapshot path (--json) is exercised too
-#   3. a section-key diff of the smoke snapshot against the committed
-#      per-PR snapshot: every bench section present in the committed
-#      BENCH_pr*.json must still be emitted by the smoke run, so a
-#      silently dropped/renamed section fails fast
+#   3. the cross-PR regression gate (scripts/bench_diff.py): the smoke
+#      snapshot is compared against the newest committed BENCH_pr*.json
+#      — per-metric tolerance bands, section-loss detection, and a
+#      strict schema pass over EVERY committed snapshot.  A trip here
+#      is a hard failure, not a warning.
 #   4. a --trace smoke: one bench module under the ring tracer, then
 #      schema-validate the Chrome trace-event JSON (Perfetto-openable)
 #   5. an attribution-key diff: every kernel-cost category present in
 #      the committed snapshot's attr rows must still be emitted, and
 #      every attr/total row must say conserved=yes
+# Throwaway artifacts land in .bench/ (gitignored); committed snapshots
+# are the BENCH_pr<N>.json files at the repo root.
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+mkdir -p .bench
 python -m pytest -x -q "$@"
-python -m benchmarks.run --smoke --json BENCH_smoke.json
+python -m benchmarks.run --smoke --json .bench/BENCH_smoke.json
+python scripts/bench_diff.py --fresh .bench/BENCH_smoke.json --strict-schema
 python - <<'EOF'
 import glob
 import json
@@ -29,15 +34,7 @@ snapshots = sorted(glob.glob("BENCH_pr*.json"),
 assert snapshots, "no committed BENCH_pr*.json snapshot found"
 ref = snapshots[-1]                     # newest committed snapshot
 ref_rows = json.load(open(ref))["rows"]
-smoke_rows = json.load(open("BENCH_smoke.json"))["rows"]
-want = {r["name"].split("/")[0] for r in ref_rows}
-have = {r["name"].split("/")[0] for r in smoke_rows}
-missing = want - have
-assert not missing, \
-    f"bench sections in {ref} missing from the smoke run: " \
-    f"{sorted(missing)}"
-print(f"# bench section keys OK: smoke covers all "
-      f"{len(want)} sections of {ref}")
+smoke_rows = json.load(open(".bench/BENCH_smoke.json"))["rows"]
 
 # ---- kernel-cost attribution: category-key diff + conservation marks
 def attr_cats(rows):
@@ -57,12 +54,12 @@ assert not bad, f"attribution not conserved in: {bad}"
 print(f"# attribution OK: {len(have)} categories, "
       f"{len(totals)} sections conserved")
 EOF
-python -m benchmarks.run --smoke --only fig9wal --trace trace_smoke.json \
-    > /dev/null
+python -m benchmarks.run --smoke --only fig9wal \
+    --trace .bench/trace_smoke.json > /dev/null
 python - <<'EOF'
 import json
 
-doc = json.load(open("trace_smoke.json"))
+doc = json.load(open(".bench/trace_smoke.json"))
 assert set(doc) >= {"traceEvents", "displayTimeUnit"}, "bad top level"
 evs = doc["traceEvents"]
 assert evs, "empty trace"

@@ -343,6 +343,18 @@ class BufferPool:
                 sqe.cmd = "passthru"
         return IoRequest(prep)
 
+    def register_metrics(self, reg, prefix: str) -> None:
+        """Pool stat surface for the telemetry sampler: windowed hit
+        rate (Δhits / Δaccesses per interval), cumulative fault/
+        writeback counters, and the free-list depth gauge.  Pure
+        reads."""
+        reg.wrate(f"{prefix}/hit_rate", lambda: self.hits,
+                  lambda: self.hits + self.faults, unit="frac")
+        reg.counter(f"{prefix}/faults", lambda: self.faults)
+        reg.counter(f"{prefix}/writebacks", lambda: self.writebacks)
+        reg.counter(f"{prefix}/wal_waits", lambda: self.wal_waits)
+        reg.gauge(f"{prefix}/free_frames", lambda: len(self.free))
+
 
 # ---------------------------------------------------------------------------
 # partitioned pool (multi-core scale-up)
@@ -514,3 +526,15 @@ class PartitionedBufferPool:
     @property
     def wal_waits(self) -> int:
         return sum(p.wal_waits for p in self.parts)
+
+    def register_metrics(self, reg, prefix: str) -> None:
+        """Partitioned-pool stat surface: the aggregate hit rate /
+        counters of the single-core pool plus the latch split."""
+        reg.wrate(f"{prefix}/hit_rate", lambda: self.hits,
+                  lambda: self.hits + self.faults, unit="frac")
+        reg.counter(f"{prefix}/faults", lambda: self.faults)
+        reg.counter(f"{prefix}/writebacks", lambda: self.writebacks)
+        reg.counter(f"{prefix}/wal_waits", lambda: self.wal_waits)
+        reg.gauge(f"{prefix}/free_frames",
+                  lambda: sum(len(p.free) for p in self.parts))
+        reg.counter(f"{prefix}/latch_cross", lambda: self.latch_cross)

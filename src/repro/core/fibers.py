@@ -53,6 +53,7 @@ from repro.core.adaptive import AdaptiveBatcher, SubmitPolicy
 from repro.core.ring import IoUring
 from repro.core.sqe import CQE, SQE, CqeFlags
 from repro.core.timeline import CoreClock
+from repro.observe import metrics as _metrics
 from repro.observe import trace as _trace
 
 
@@ -222,6 +223,15 @@ class FiberScheduler:
     def run(self, *, until: Optional[Callable[[], bool]] = None) -> None:
         """Run until all fibers finish (or ``until`` returns True)."""
         while True:
+            # opt-in telemetry hook: sample the installed registry at
+            # its virtual-time cadence.  Deliberately NOT a fiber — a
+            # queued sampler would perturb ready_count(), which the
+            # adaptive submit/flush policies read; this hook only reads
+            # clocks and counters (observer effect = zero, pinned in
+            # tests/test_observability.py)
+            mreg = _metrics.CURRENT
+            if mreg is not None:
+                mreg.maybe_sample(self.ring.tl.now)
             if until is not None and until():
                 return
             if self.ready_count() == 0 and not self.waiting \

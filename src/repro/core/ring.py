@@ -658,6 +658,26 @@ class IoUring:
         tr.process_name(pid, f"ring{self.ring_id}")
         tr.instant(name, ts, pid, 0, args)
 
+    def register_metrics(self, reg, prefix: str) -> None:
+        """Ring stat surface for the opt-in telemetry sampler
+        (``repro.observe.metrics``): cumulative counters, windowed
+        batch efficiency, windowed attribution shares of charged CPU,
+        the CQ backlog gauge, and per-op-class latency digests.  Every
+        source is a pure read of ``self.stats``/queues."""
+        st = self.stats
+        reg.counter(f"{prefix}/enters", lambda: st.enters)
+        reg.counter(f"{prefix}/sqes", lambda: st.sqes_submitted)
+        reg.counter(f"{prefix}/cqes", lambda: st.cqes_reaped)
+        reg.counter(f"{prefix}/worker_fallbacks",
+                    lambda: st.worker_fallbacks)
+        reg.wrate(f"{prefix}/batch_eff", lambda: st.sqes_submitted,
+                  lambda: st.enters, unit="sqe/enter")
+        reg.gauge(f"{prefix}/cq_backlog",
+                  lambda: len(self.cq) + len(self._pending_task_work))
+        reg.wgroup(f"{prefix}/attr", lambda: st.attribution,
+                   lambda: st.cpu_seconds_app + st.cpu_seconds_sqpoll)
+        reg.hists(f"{prefix}/lat", lambda: st.lat)
+
     def _charge(self, cycles: float, on_sqpoll: bool, cat: str,
                 op_cls: str = "ring") -> None:
         """Charge ``cycles`` to the right clock AND attribute the same

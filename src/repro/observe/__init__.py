@@ -7,11 +7,18 @@ Three layers, all reading the same per-ring accounting:
   the attributed sum equals ``cpu_seconds_app + cpu_seconds_sqpoll``;
 * ``trace`` exports an opt-in, zero-observer-effect event trace
   (Chrome ``trace_event`` JSON, openable in Perfetto);
+* ``metrics`` samples an opt-in, zero-observer-effect *time-series*
+  of the same counters at a virtual-clock cadence (gauges, windowed
+  rates, percentile digests — ``benchmarks/run.py --metrics``);
 * ``advisor`` turns an attribution breakdown into the paper's
   guideline diagnoses — each finding names the ladder rung that
-  fixes the detected anti-pattern.
+  fixes the detected anti-pattern;
+* ``slo`` (imported on demand: ``repro.observe.slo``) drives the
+  open-loop Poisson load generator behind the ``slo/*`` benches.
 """
 
+from repro.observe import metrics
 from repro.observe.advisor import (Finding, RingReport, diagnose,
                                    report_from_result, report_from_stats)
+from repro.observe.metrics import MetricsRegistry
 from repro.observe.trace import Tracer, current, install, uninstall

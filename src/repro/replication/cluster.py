@@ -110,6 +110,9 @@ class ReplicatedCluster:
         its own attached ring."""
         p, s = self.primary, self.standby
         stop = lambda: all(f.done for f in workers)       # noqa: E731
+        from repro.observe import metrics as _metrics
+        if _metrics.CURRENT is not None:
+            self.register_metrics(_metrics.CURRENT)
         p.sched.spawn(self.sender.run(stop), core=0, ring=0,
                       name="repl-sender")
         p.sched.spawn(self._ack_receiver(), core=0, ring=0,
@@ -191,6 +194,29 @@ class ReplicatedCluster:
         return workers
 
     # ------------------------------------------------------------ stats
+
+    def register_metrics(self, reg, prefix: str = "repl") -> None:
+        """Replication stat surface for the telemetry sampler: durable
+        and apply lag gauges (primary durable LSN minus the standby's
+        durable/applied horizon), ship-stream counters, and the
+        standby ring's own surface.  Pure reads — registration must
+        not change scheduling (observer effect = zero)."""
+        p, s = self.primary, self.standby
+        base = reg.unique(prefix)
+        reg.gauge(f"{base}/durable_lag_b",
+                  lambda: p.wal.durable_lsn - s.wal.durable_lsn,
+                  unit="bytes")
+        reg.gauge(f"{base}/apply_lag_b",
+                  lambda: p.wal.durable_lsn - s.applied_lsn,
+                  unit="bytes")
+        reg.counter(f"{base}/acks", lambda: self.acks)
+        reg.counter(f"{base}/ship_frames", lambda: self.sender.frames)
+        reg.counter(f"{base}/ship_chunks", lambda: self.sender.chunks)
+        reg.counter(f"{base}/ship_bytes",
+                    lambda: self.sender.ship_bytes, unit="bytes")
+        reg.counter(f"{base}/standby_commits",
+                    lambda: len(s.commits))
+        s.ring.register_metrics(reg, f"{base}/standby_ring")
 
     def result_rows(self) -> Dict:
         p, s = self.primary, self.standby

@@ -232,9 +232,43 @@ class ShuffleEngine:
             membytes += n_tuples * 64
         return self._charge(node, core, cpu, mem_bytes=membytes)
 
+    # ---------------------------------------------------------- metrics
+
+    def register_metrics(self, reg, prefix: str = "shuffle") -> None:
+        """Shuffle stat surface for the telemetry sampler.  Aggregated
+        across all ``n_nodes × n_workers`` rings (per-ring series would
+        be up to 192 of them); pure reads only."""
+        base = reg.unique(prefix)
+        rs = self.rings
+
+        def rsum(attr):
+            return lambda: sum(getattr(r.stats, attr) for r in rs)
+
+        reg.counter(f"{base}/sent_bytes", lambda: sum(self.sent),
+                    unit="bytes")
+        reg.counter(f"{base}/received_bytes",
+                    lambda: sum(self.received), unit="bytes")
+        reg.counter(f"{base}/enters", rsum("enters"))
+        reg.counter(f"{base}/multishot_cqes", rsum("multishot_recv_cqes"))
+        reg.counter(f"{base}/zc_notifs", rsum("zc_notifs"))
+        reg.counter(f"{base}/buf_ring_exhausted",
+                    rsum("buf_ring_exhausted"))
+        reg.counter(f"{base}/bounce_bytes", rsum("bounce_bytes_copied"),
+                    unit="bytes")
+        reg.wrate(f"{base}/batch_eff", rsum("sqes_submitted"),
+                  rsum("enters"), unit="sqe/enter")
+        reg.wrate(f"{base}/egress_gib_s",
+                  lambda: sum(self.sent) / 2**30, None, unit="GiB/s")
+        reg.wgroup(f"{base}/attr", self._merged_attribution,
+                   lambda: sum(r.stats.cpu_seconds_app +
+                               r.stats.cpu_seconds_sqpoll for r in rs))
+
     # -------------------------------------------------------------- run
 
     def run(self) -> Dict:
+        from repro.observe import metrics as _metrics
+        if _metrics.CURRENT is not None:
+            self.register_metrics(_metrics.CURRENT)
         cfg = self.cfg
         n = cfg.n_nodes
         for node in range(n):

@@ -65,9 +65,16 @@ class ShuffleConfig:
     scan_cost_per_byte: float = 0.004e-9
     partition_cost_per_tuple: float = 3e-9
     tuned_network: bool = True       # Fig. 14: qdisc/socket-buffer tuning
-    # receive-side provided-buffer ring (engine only; the oracle assumes
-    # it never runs dry)
+    # receive-side provided-buffer ring; when a flow carries more
+    # chunks than this, the ring runs dry and the receiver falls into
+    # its exhaustion/re-arm drain cycle (modeled by engine AND oracle)
     rx_buffers: int = 16
+    # socket/TCP send-buffer depth in chunks per flow: a sender blocks
+    # once this many chunks are in flight ahead of the receiver's
+    # processing (kernel socket buffers hold several MiB — much deeper
+    # than the provided-buffer ring, so this binds only on flows far
+    # longer than rx_buffers)
+    tx_window_chunks: int = 48
 
     def nic_spec(self) -> NICSpec:
         return NICSpec(bw=self.link_bw)
@@ -91,6 +98,21 @@ class ShuffleSim:
                               tuned=cfg.tuned_network)
         self.mem_free = [0.0] * n     # node memory-bandwidth meter
         self._zc_pending: Dict = {}   # (src, worker) -> unreaped tx_done
+        # receive-side queueing feedback (ROADMAP gap (a), now modeled):
+        # the engine's provided-buffer ring holds cfg.rx_buffers chunks
+        # per inbound flow, and a chunk's buffer recycles only when its
+        # probe work completes — so a sender may run at most that many
+        # chunks ahead of the receiver's processing.  Chunk k of a flow
+        # must wait for chunk k - rx_buffers to finish; when that
+        # completion is not yet known, the sending worker PARKS here
+        # and probe_ev resumes it (event-driven, like a fiber blocking
+        # on a full buffer ring — an inline lower bound cannot work
+        # because every send fires, in event time, before any receive
+        # processing is booked)
+        self._flow_sent: Dict = {}     # flow -> chunks entered so far
+        self._flow_seen: Dict = {}     # flow -> chunks arrived so far
+        self._flow_done: Dict = {}     # flow -> processed-chunk times
+        self._flow_waiters: Dict = {}  # flow -> parked resumes
         self.sent = [0] * n
         self.received = [0] * n
         self.mem_bytes = [0] * n      # memory traffic (copies + probe)
@@ -180,6 +202,45 @@ class ShuffleSim:
         return t_cpu
 
     def _on_recv(self, node: int, src: int, nbytes: int, t: float) -> None:
+        flow = (node, src)
+        k = self._flow_seen.get(flow, 0)
+        self._flow_seen[flow] = k + 1
+        self._rx_ready(node, src, nbytes, t, k)
+
+    def _rx_ready(self, node: int, src: int, nbytes: int, t: float,
+                  k: int) -> None:
+        """Admit arrived chunk k of flow (node, src) once the engine's
+        receiver could actually see its CQE.  With a provided-buffer
+        ring of ``rx_buffers`` chunks, the (win+1)'th arrival finds the
+        ring dry: the multishot recv dies with EAGAIN and the receiver
+        fiber sleeps until every queued probe completes, then re-arms
+        and drains (see ShuffleEngine._receiver).  So chunks of window
+        m >= 1 are not even COPIED before the probe of the last window
+        m-1 chunk finishes — the rx-queueing feedback the closed form
+        used to miss (ROADMAP gap (a))."""
+        cfg, c = self.cfg, self.costs
+        win = cfg.rx_buffers
+        if cfg.iface != "epoll" and k >= win:
+            need = win * (k // win) - 1
+            done = self._flow_done.get((node, src), ())
+            if len(done) <= need:
+                self._flow_waiters.setdefault((node, src), []).append(
+                    lambda t2: self._rx_ready(node, src, nbytes,
+                                              max(t, t2), k))
+                return
+            t = max(t, done[need])
+            if k % win == 0:
+                # the exhaustion itself: one dead EAGAIN CQE, a timeout
+                # SQE to sleep on, and the re-arm submit
+                t = self._charge(node, receiver_worker(cfg, node, src),
+                                 t, self._cqe_s() +
+                                 c.s(c.syscall + c.sock_submit))
+            self._rx_chunk(node, src, nbytes, t, drained=True)
+            return
+        self._rx_chunk(node, src, nbytes, t)
+
+    def _rx_chunk(self, node: int, src: int, nbytes: int,
+                  t: float, drained: bool = False) -> None:
         cfg, c = self.cfg, self.costs
         self.received[node] += nbytes
         membytes = nbytes                      # NIC DMA write
@@ -200,26 +261,22 @@ class ShuffleSim:
                                 cfg.partition_cost_per_tuple)
             membytes += n_tuples * 64          # cacheline per insert
         self.mem_bytes[node] += membytes
-        # same charge order as the engine: the ring burns the kernel-side
-        # copy at arrival; the probe work (which carries the memory
-        # traffic) is booked by a second event once the copy completes —
-        # booking it now would reserve the node memory meter at a
-        # far-future core time and convoy every later charge behind it
-        # (the meter is one FIFO lane; see ShuffleEngine._consume)
+        # same charge order as the engine's receiver fiber: the ring
+        # burns the kernel-side copy when the CQE fires, then _consume
+        # books the probe work (which carries the memory traffic) at
+        # the core's horizon immediately — even when that reserves the
+        # node memory meter at far-future core times (the meter is one
+        # FIFO lane, so bookings must land in the same order the
+        # engine makes them; see ShuffleEngine._consume)
         t1 = self._charge(node, w, t, cpu)
-
-        def probe_ev(t_ready):
-            # later arrivals' copies may have queued on the core since
-            # this was scheduled: re-defer until it is actually free so
-            # the meter booking lands at heap-now (like a fiber resume)
-            avail = max(t_ready, self.core_free[node][w])
-            if avail > t_ready:
-                self._at(avail, lambda: probe_ev(avail))
-                return
-            t2 = self._charge(node, w, t_ready, probe,
-                              mem_bytes=membytes)
-            self.t_end = max(self.t_end, t2)
-        self._at(t1, lambda: probe_ev(t1))
+        t2 = self._charge(node, w, t1, probe, mem_bytes=membytes)
+        # chunk fully processed: its provided buffer recycles at t2,
+        # releasing one window slot of this flow — resume any parked
+        # senders/receivers
+        self._flow_done.setdefault((node, src), []).append(t2)
+        for fn in self._flow_waiters.pop((node, src), []):
+            fn(t2)
+        self.t_end = max(self.t_end, t2)
 
     # ------------------------------------------------------------- run
 
@@ -255,9 +312,21 @@ class ShuffleSim:
             if ev is None:
                 self.t_end = max(self.t_end, t)
                 return
+            # one step = one fiber burst: the engine's sender fiber
+            # books every morsel charge back-to-back (pure clock
+            # arithmetic, no yield) until a send batch forces it to
+            # enter the kernel — so the oracle consumes consecutive
+            # morsels plus the first send batch per event.  Matching
+            # the yield granularity matters: each burst books the
+            # shared node memory meter at this worker's growing core
+            # times, and the meter (one FIFO lane) idles between a
+            # burst's bookings exactly as it does under the engine.
             sends = []
             while ev is not None:
                 if ev[0] == "morsel":
+                    if sends:          # fiber yields (flushes) before
+                        plans[key] = _chain(ev, plans[key])
+                        break          # the next morsel runs
                     _, nb, n_tuples, local = ev
                     # scan + partition the morsel
                     cpu = nb * cfg.scan_cost_per_byte + \
@@ -271,11 +340,7 @@ class ShuffleSim:
                         self.mem_bytes[src] += lt * 64
                 else:
                     sends.append((ev[1], ev[2]))
-                nxt = next(plans[key], None)
-                if nxt is not None and nxt[0] == "morsel":
-                    plans[key] = _chain(nxt, plans[key])
-                    break
-                ev = nxt
+                ev = next(plans[key], None)
             if sends:
                 # engine charge order: stage every chunk of the batch
                 # (one contiguous meter booking), THEN burn the per-send
@@ -284,8 +349,34 @@ class ShuffleSim:
                     membytes = nbytes if cfg.zc_send else 3 * nbytes
                     self.mem_bytes[src] += membytes
                     t = self._charge(src, w, t, 0.0, mem_bytes=membytes)
-                for dst, nbytes in sends:
-                    t = self._send_chunk(src, dst, nbytes, t, w)
+                flush_sends(key, sends, 0, t)
+                return
+            clocks[key] = t
+            self._at(t, lambda: step(key))
+
+        def flush_sends(key, sends, i, t):
+            """Send sends[i:], honoring the per-flow socket-buffer
+            window (tx_window_chunks).  Parks (returns without
+            rescheduling step) when a flow's window is full and the
+            releasing completion is not yet known; probe_ev re-enters
+            here once the receiver catches up."""
+            src, w = key
+            win = cfg.tx_window_chunks
+            while i < len(sends):
+                dst, nbytes = sends[i]
+                flow = (dst, src)
+                k = self._flow_sent.get(flow, 0)
+                if k >= win:
+                    done = self._flow_done.get(flow, ())
+                    if len(done) <= k - win:
+                        self._flow_waiters.setdefault(flow, []).append(
+                            lambda t2, i=i, t=t: flush_sends(
+                                key, sends, i, max(t, t2)))
+                        return
+                    t = max(t, done[k - win])
+                self._flow_sent[flow] = k + 1
+                t = self._send_chunk(src, dst, nbytes, t, w)
+                i += 1
             clocks[key] = t
             self._at(t, lambda: step(key))
 

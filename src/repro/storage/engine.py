@@ -67,6 +67,7 @@ from repro.core import (AdaptiveBatcher, AdaptiveFlush, CoreClock,
                         EagerSubmit, FiberScheduler, IoUring, NVMeSpec,
                         SetupFlags, Timeline)
 from repro.core.backends import SimDisk
+from repro.observe import metrics as _metrics
 from repro.storage.btree import BTree, bulk_load
 from repro.wal.group_commit import GroupCommit, MultiCoreGroupCommit
 from repro.wal.log import (APPLY_DELTA, APPLY_IMG, LogHeader, RecordType,
@@ -547,6 +548,28 @@ class StorageEngine:
             wal.header.next_pid = self.tree.next_pid
             wal.truncate_to(horizon)
 
+    # --------------------------------------------------------- metrics
+
+    def register_metrics(self, reg, prefix: str = "engine",
+                         txns=None) -> None:
+        """Engine-wide stat surface for the telemetry sampler: every
+        own ring's counters, the buffer pool's hit/fault surface, the
+        group-commit queue, scheduler depth gauges, and — when
+        ``txns`` supplies the completed-transaction counter — the
+        windowed tps rate.  Pure reads; registration must not change
+        scheduling (the zero-observer-effect pin covers this path)."""
+        base = reg.unique(prefix)
+        for i, r in enumerate(self._own_rings):
+            r.register_metrics(reg, f"{base}/ring{i}")
+        self.pool.register_metrics(reg, f"{base}/pool")
+        if self.gc is not None:
+            self.gc.register_metrics(reg, f"{base}/gc")
+        reg.gauge(f"{base}/iodepth", lambda: self.sched.inflight)
+        reg.gauge(f"{base}/ready_fibers", self.sched.ready_count)
+        if txns is not None:
+            reg.counter(f"{base}/txns", txns)
+            reg.wrate(f"{base}/tps", txns, None, unit="txn/s")
+
     # ------------------------------------------------------ crash / run
 
     def crash_images(self) -> Tuple[bytes, bytes]:
@@ -568,6 +591,13 @@ class StorageEngine:
                 counter["done"] += 1
                 yield from make_txn(rng)
 
+        mreg = _metrics.CURRENT
+        if mreg is not None and getattr(self, "_mreg", None) is not mreg:
+            # opt-in telemetry: register the whole stat surface once
+            # per installed registry (repeat runs re-use the series)
+            self._mreg = mreg
+            self.register_metrics(mreg,
+                                  txns=lambda: counter["done"])
         t0 = self.tl.now
         workers = []
         for i in range(self.cfg.n_fibers):
@@ -584,27 +614,7 @@ class StorageEngine:
         if self.wal is not None and self.cfg.ckpt_every > 0:
             self.sched.spawn(self._checkpointer(counter, n_txns),
                              name="checkpointer")
-        if self.wal is not None:
-            if self.mc:
-                # one background writer per core, cleaning its own pool
-                # partition on its own ring
-                for c in range(self.n_cores):
-                    self.sched.spawn(
-                        self.page_cleaner_part(c, stop=done), core=c,
-                        ring=0 if self.cfg.shared_ring else c,
-                        name=f"page-cleaner{c}")
-            else:
-                self.sched.spawn(self.page_cleaner(stop=done),
-                                 name="page-cleaner")
-        if isinstance(self.gc, MultiCoreGroupCommit):
-            self.sched.spawn(self.gc.leader(
-                stop=lambda: self.gc.pending == 0 and
-                all(f.done for f in workers)), core=0, ring=0,
-                name="wal-leader")
-        if self.repl is not None:
-            # replication fibers: primary log sender + ack receiver,
-            # standby receiver/flusher/applier (repro.replication)
-            self.repl.spawn_fibers(workers)
+        self.spawn_service_fibers(workers, done)
         self.sched.run()
         # multi-core: the run ends when the last core drains, which may
         # be past the last timeline event
@@ -685,6 +695,34 @@ class StorageEngine:
                               for r in rings),
             "attribution": attr,
         }
+
+    def spawn_service_fibers(self, workers, done) -> None:
+        """The background fiber complement shared by ``run_fibers`` and
+        the open-loop SLO harness (``repro.observe.slo``): page
+        cleaners, the multi-core WAL leader, and — on a replicated
+        engine — the replication fibers.  ``done()`` is the workload's
+        termination predicate; ``workers`` the worker fiber handles."""
+        if self.wal is not None:
+            if self.mc:
+                # one background writer per core, cleaning its own pool
+                # partition on its own ring
+                for c in range(self.n_cores):
+                    self.sched.spawn(
+                        self.page_cleaner_part(c, stop=done), core=c,
+                        ring=0 if self.cfg.shared_ring else c,
+                        name=f"page-cleaner{c}")
+            else:
+                self.sched.spawn(self.page_cleaner(stop=done),
+                                 name="page-cleaner")
+        if isinstance(self.gc, MultiCoreGroupCommit):
+            self.sched.spawn(self.gc.leader(
+                stop=lambda: self.gc.pending == 0 and
+                all(f.done for f in workers)), core=0, ring=0,
+                name="wal-leader")
+        if self.repl is not None:
+            # replication fibers: primary log sender + ack receiver,
+            # standby receiver/flusher/applier (repro.replication)
+            self.repl.spawn_fibers(workers)
 
     def _checkpointer(self, counter, n_txns: int) -> Generator:
         last = 0

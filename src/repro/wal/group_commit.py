@@ -98,6 +98,24 @@ class GroupCommit:
             w.stats.groups.append(len(done))
             self._waiting = [l for l in self._waiting if l > w.durable_lsn]
 
+    def queue_depth(self) -> int:
+        """Committers enqueued but not yet released (telemetry gauge)."""
+        return len(self._waiting)
+
+    def register_metrics(self, reg, prefix: str) -> None:
+        """Group-commit stat surface for the telemetry sampler: the
+        commit-queue depth gauge plus windowed group size and commit
+        wait derived from ``WalStats``.  Pure reads."""
+        ws = self.wal.stats
+        reg.gauge(f"{prefix}/commit_queue_depth", self.queue_depth)
+        reg.counter(f"{prefix}/commits", lambda: ws.commits)
+        reg.counter(f"{prefix}/fsyncs", lambda: ws.fsyncs)
+        reg.wrate(f"{prefix}/group_size", lambda: sum(ws.groups),
+                  lambda: len(ws.groups), unit="txn/flush")
+        reg.wrate(f"{prefix}/commit_wait_us",
+                  lambda: ws.commit_wait_s * 1e6,
+                  lambda: ws.commits, unit="us")
+
 
 class MultiCoreGroupCommit:
     """Cross-core commit queues feeding ONE leader fiber.
@@ -164,3 +182,20 @@ class MultiCoreGroupCommit:
             w.stats.groups.append(batch)
             self.pending -= batch
             self._gate.open()
+
+    def queue_depth(self) -> int:
+        """Commits enqueued across all cores, not yet released."""
+        return self.pending
+
+    def register_metrics(self, reg, prefix: str) -> None:
+        """Same surface as ``GroupCommit.register_metrics`` over the
+        cross-core queues."""
+        ws = self.wal.stats
+        reg.gauge(f"{prefix}/commit_queue_depth", self.queue_depth)
+        reg.counter(f"{prefix}/commits", lambda: ws.commits)
+        reg.counter(f"{prefix}/fsyncs", lambda: ws.fsyncs)
+        reg.wrate(f"{prefix}/group_size", lambda: sum(ws.groups),
+                  lambda: len(ws.groups), unit="txn/flush")
+        reg.wrate(f"{prefix}/commit_wait_us",
+                  lambda: ws.commit_wait_s * 1e6,
+                  lambda: ws.commits, unit="us")

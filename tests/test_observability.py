@@ -17,15 +17,22 @@ advisor (the observability PR):
   apart from data CQEs.
 """
 
+import json
 import math
+import re
+import subprocess
+import sys
 
 from dataclasses import replace
+from pathlib import Path
+
+import pytest
 
 from repro.core import (CqeFlags, IoUring, NICSpec, NVMeSpec, SetupFlags,
                         SimNVMe, SimNetwork, SimSocket, SqeFlags, Timeline)
 from repro.core import ring as R
-from repro.observe import (diagnose, report_from_result, report_from_stats,
-                           trace as otrace)
+from repro.observe import (diagnose, metrics, report_from_result,
+                           report_from_stats, slo, trace as otrace)
 from repro.replication import ReplicatedCluster
 from repro.shuffle import ShuffleConfig
 from repro.shuffle.engine import ShuffleEngine
@@ -356,3 +363,320 @@ def test_lat_hist_percentile_math():
     assert h.p99() > 1e-4
     h.record(-1.0)          # clamped, never throws
     assert h.n == 101
+
+
+# --------------------------- advisor e2e: the GL4 storage-tuning rungs
+
+def _ycsb_run(rung_name):
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    cfg = replace(ladder[rung_name], n_fibers=32, pool_frames=512)
+    eng = StorageEngine(cfg, n_tuples=5000)
+    res = eng.run_fibers(lambda rng, e=eng: ycsb_update_txn(e, rng), 96)
+    return res, {f.rule: f for f in diagnose(report_from_result(res))}
+
+
+def test_advisor_flags_unregistered_buffers():
+    """+BatchSubmit still pays the per-op pin+copy on every storage
+    SQE; the advisor must point at exactly the next ladder rung
+    (+RegBufs, GL4), and running that rung must clear the finding."""
+    res, by = _ycsb_run("+BatchSubmit")
+    assert report_from_result(res).share("pin_copy") > 0.02
+    assert "storage-bounce" in by
+    assert by["storage-bounce"].rung == "+RegBufs"
+    res, by = _ycsb_run("+RegBufs")
+    assert report_from_result(res).share("pin_copy") == 0.0
+    assert "storage-bounce" not in by
+
+
+def test_advisor_flags_irq_completions():
+    """+Passthru strips the generic storage stack, which leaves
+    interrupt-driven completion handling as the dominant kernel cost;
+    the advisor must say +IOPoll, and the IOPoll rung (reap from the
+    device queue) must clear it."""
+    res, by = _ycsb_run("+Passthru")
+    assert report_from_result(res).share("complete_irq") > 0.10
+    assert "irq-completions" in by
+    assert by["irq-completions"].rung == "+IOPoll"
+    res, by = _ycsb_run("+IOPoll")
+    assert report_from_result(res).share("complete_irq") == 0.0
+    assert "irq-completions" not in by
+
+
+def test_advisor_flags_speculative_recv_misses():
+    """A recv armed BEFORE any data is queued wastes the kernel's
+    speculative inline attempt every single time (paper §4.1); the
+    advisor must say POLL_FIRST, and the flag — which skips the
+    attempt — must clear the finding on the same traffic."""
+    def recv_rounds(flags):
+        tl, ra, rb = make_socket_rings()
+        for i in range(16):
+            sqe = rb.get_sqe()
+            R.prep_recv(sqe, 4, 64, user_data=i, flags=flags,
+                        buf=bytearray(64))
+            rb.submit()               # nothing queued yet: a miss
+            sqe = ra.get_sqe()
+            R.prep_send(sqe, 4, 64, user_data=i)
+            ra.submit()
+            ra.wait_cqes(1)
+            rb.wait_cqes(1)
+        return report_from_stats([rb.stats])
+
+    rep = recv_rounds(SqeFlags.NONE)
+    assert rep.share("sock_speculative") > 0.05
+    by = {f.rule: f for f in diagnose(rep)}
+    assert "speculative-recv-miss" in by
+    assert by["speculative-recv-miss"].rung == "POLL_FIRST"
+    rep = recv_rounds(SqeFlags.POLL_FIRST)
+    assert rep.share("sock_speculative") == 0.0
+    assert "speculative-recv-miss" not in {f.rule for f in diagnose(rep)}
+
+
+# ------------------------------------------ metrics sampler (tentpole)
+
+def test_metrics_sampling_has_zero_observer_effect():
+    """Same discipline as the tracer: the sampler hook only READS
+    clocks and counters from the scheduler loop, so every measured
+    number is bit-identical with sampling on or off."""
+    base = _mini_wal_engine()
+    reg = metrics.MetricsRegistry(interval_s=1e-4)
+    metrics.install(reg)
+    try:
+        sampled = _mini_wal_engine()
+    finally:
+        metrics.uninstall()
+    assert metrics.current() is None
+    assert reg.ticks > 0 and reg.n_points > 0
+    for key in ("tps", "app_cpu_s", "sqpoll_cpu_s", "enters",
+                "commit_wait_us", "fsyncs"):
+        assert sampled[key] == base[key], key
+    assert sampled["attribution"] == base["attribution"]
+
+
+def test_metrics_engine_registers_full_stat_surface():
+    """A StorageEngine run under an installed registry exposes rings,
+    buffer pool, group commit, scheduler gauges, and windowed tps —
+    names per the docs/observability.md scheme."""
+    reg = metrics.MetricsRegistry(interval_s=1e-4)
+    metrics.install(reg)
+    try:
+        _mini_wal_engine()
+    finally:
+        metrics.uninstall()
+    names = set(reg.series)
+    assert "engine/ring0/enters" in names
+    assert "engine/tps" in names
+    assert any(n.startswith("engine/pool/") for n in names)
+    assert any(n.startswith("engine/gc/") for n in names)
+    assert any("/attr/" in n for n in names)
+    # windowed percentile digests derived from the rings' LatHists
+    assert any(re.search(r"/lat/\w+/p99_us$", n) for n in names)
+    # every series the sampler filled is (t, v)-parallel and time-sorted
+    for s in reg.series.values():
+        assert len(s.t) == len(s.v)
+        assert all(a <= b for a, b in zip(s.t, s.t[1:]))
+    doc = reg.to_json()
+    assert doc["dump_version"] == metrics.DUMP_VERSION
+    assert doc["ticks"] == reg.ticks
+
+
+def test_metrics_sampler_cadence_quantization():
+    """One sample per crossed interval boundary, stamped with actual
+    virtual time; a long idle gap yields ONE late sample, never a
+    catch-up burst."""
+    reg = metrics.MetricsRegistry(interval_s=1e-3)
+    reg.gauge("g/x", lambda: 1.0)
+    reg.maybe_sample(0.0)
+    reg.maybe_sample(0.0004)        # inside the window: no sample
+    assert reg.ticks == 1
+    reg.maybe_sample(0.0011)
+    assert reg.ticks == 2
+    reg.maybe_sample(0.0105)        # 9 boundaries skipped while idle
+    reg.maybe_sample(0.0109)        # still inside the re-quantized window
+    assert reg.ticks == 3
+    assert reg.series["g/x"].t == [0.0, 0.0011, 0.0105]
+
+
+def test_metrics_sampler_survives_clock_restart():
+    """sweep() runs a fresh engine (Timeline back at 0) per rate under
+    one registry: a backwards time jump re-quantizes the next boundary
+    instead of stalling sampling forever."""
+    reg = metrics.MetricsRegistry(interval_s=1e-3)
+    reg.gauge("g/x", lambda: 1.0)
+    reg.maybe_sample(0.5)
+    assert reg.ticks == 1
+    reg.maybe_sample(0.0002)        # fresh engine started: jump back
+    assert reg.ticks == 1
+    reg.maybe_sample(0.0015)        # ...and its first boundary samples
+    assert reg.ticks == 2
+
+
+def test_metrics_max_ticks_truncates():
+    reg = metrics.MetricsRegistry(interval_s=1e-3, max_ticks=2)
+    reg.counter("g/n", lambda: 1.0)
+    for k in range(4):
+        reg.sample(k * 1e-3)
+    assert reg.ticks == 2
+    assert reg.truncated
+    assert len(reg.series["g/n"].t) == 2
+    assert reg.to_json()["truncated"] is True
+
+
+def test_metrics_unique_prefixes_and_duplicate_guard():
+    reg = metrics.MetricsRegistry()
+    assert reg.unique("tpcc") == "tpcc"
+    assert reg.unique("tpcc") == "tpcc#2"
+    reg.gauge("a/b", lambda: 0.0)
+    with pytest.raises(AssertionError):
+        reg.counter("a/b", lambda: 0.0)
+
+
+def test_metrics_windowed_rate_and_percentile_digest():
+    from repro.core import LatHist
+    reg = metrics.MetricsRegistry(interval_s=1e-3)
+    state = {"n": 0.0}
+    h = LatHist()
+    reg.wrate("e/tps", lambda: state["n"])
+    reg.hists("e/lat", lambda: {"read": h})
+    reg.sample(0.0)                 # primes the deltas: no rate point
+    assert "e/tps" in reg.series and reg.series["e/tps"].v == []
+    state["n"] = 50.0
+    for _ in range(90):
+        h.record(100e-6)
+    for _ in range(10):
+        h.record(10e-3)
+    reg.sample(1e-3)
+    assert reg.series["e/tps"].v == [pytest.approx(50.0 / 1e-3)]
+    p50 = reg.series["e/lat/read/p50_us"]
+    p999 = reg.series["e/lat/read/p999_us"]
+    assert 30.0 < p50.v[0] < 300.0      # log2 buckets quantize at ~2x
+    assert p999.v[0] > 3_000.0
+    # an idle window: the rate windows to 0, the digest (no new ops)
+    # emits nothing — series are sparse
+    reg.sample(2e-3)
+    assert reg.series["e/tps"].v[-1] == 0.0
+    assert len(p50.v) == 1
+
+
+# -------------------------------------- open-loop SLO harness (tentpole)
+
+def test_poisson_arrivals_deterministic_and_sized():
+    a = slo.poisson_arrivals(10_000, 0.1, seed=3)
+    assert a == slo.poisson_arrivals(10_000, 0.1, seed=3)
+    assert a == sorted(a)
+    assert all(0.0 <= t < 0.1 for t in a)
+    assert 700 < len(a) < 1300          # ~rate*duration +- Poisson noise
+    assert slo.poisson_arrivals(10_000, 0.1, seed=4) != a
+
+
+def _slo_engine():
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    cfg = replace(ladder["+GroupCommit"], n_fibers=32, pool_frames=512)
+    return StorageEngine(cfg, n_tuples=5000,
+                         spec=NVMeSpec(plp=True, fsync_lat=30e-6))
+
+
+def test_open_loop_is_deterministic():
+    def once():
+        eng = _slo_engine()
+        r = slo.run_open_loop(
+            eng, lambda rng, e=eng: ycsb_update_txn(e, rng),
+            rate_tps=20_000, duration_s=0.02, n_workers=16)
+        r.pop("hist")
+        return r
+    assert once() == once()
+
+
+def test_open_loop_overload_sheds_and_misses_slo():
+    """Past saturation an open system must shed at the bounded arrival
+    queue and the measured (queue-wait-included) tail must blow the
+    SLO; at a comfortable rate both hold."""
+    rows = slo.sweep(
+        _slo_engine,
+        lambda e: (lambda rng: ycsb_update_txn(e, rng)),
+        rates=[5_000, 300_000], duration_s=0.02, n_workers=16,
+        slo_p99_us=10_000.0, slo_p999_us=25_000.0)
+    calm, storm = rows
+    assert calm["dropped"] == 0
+    assert calm["slo_met"] is True
+    assert calm["achieved_tps"] == pytest.approx(5_000, rel=0.5)
+    assert storm["dropped"] > 0 and storm["drop_frac"] > 0.05
+    assert storm["slo_met"] is False
+    assert storm["p99_us"] > calm["p99_us"]
+    for r in rows:
+        # arrival conservation: every offered txn completed or shed
+        assert r["completed"] + r["dropped"] == r["offered"]
+        assert r["p50_us"] <= r["p99_us"] <= r["p999_us"]
+        assert r["slo_p99_us"] == 10_000.0
+        assert r["slo_p999_us"] == 25_000.0
+
+
+# ----------------------- cross-PR bench regression gate (bench_diff.py)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _bench_diff(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "bench_diff.py"), *args],
+        capture_output=True, text=True)
+
+
+def _newest_committed():
+    snaps = sorted(REPO.glob("BENCH_pr*.json"),
+                   key=lambda p: int(re.search(r"\d+", p.name).group()))
+    assert snaps, "no committed BENCH_pr*.json snapshot"
+    return snaps[-1]
+
+
+def test_bench_diff_clean_on_committed_snapshots():
+    """--strict-schema over every committed snapshot and the newest
+    snapshot gated against itself must both exit 0 — the check.sh
+    hard gate is only meaningful if the committed state is clean."""
+    p = _bench_diff("--strict-schema")
+    assert p.returncode == 0, p.stdout + p.stderr
+    p = _bench_diff("--fresh", str(_newest_committed()))
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_bench_diff_trips_on_injected_regression(tmp_path):
+    """A 10x-beyond-band drop on a higher-is-better comparable metric
+    must fail the gate with exit code 1 and name the row."""
+    from benchmarks.common import spec_for
+    doc = json.loads(_newest_committed().read_text())
+    victim = spec = None
+    for r in doc["rows"]:
+        s = spec_for(r["name"])
+        if s and s.comparable and s.hib is True \
+                and isinstance(r["value"], (int, float)) and r["value"]:
+            victim, spec = r, s
+            break
+    assert victim is not None
+    victim["value"] = victim["value"] / (10.0 * spec.band)
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text(json.dumps(doc))
+    p = _bench_diff("--fresh", str(bad))
+    assert p.returncode == 1
+    assert "REGRESSION" in p.stderr
+    assert victim["name"] in p.stderr
+
+
+def test_bench_diff_trips_on_lost_section_and_schema_drift(tmp_path):
+    doc = json.loads(_newest_committed().read_text())
+    sections = sorted({r["name"].split("/")[0] for r in doc["rows"]})
+    victim = sections[0]
+    kept = [r for r in doc["rows"]
+            if not r["name"].startswith(victim + "/")]
+    assert len(kept) < len(doc["rows"])
+    lost = tmp_path / "BENCH_lost.json"
+    lost.write_text(json.dumps(dict(doc, rows=kept)))
+    p = _bench_diff("--fresh", str(lost))
+    assert p.returncode == 1
+    assert f"section {victim!r}" in p.stderr
+    # a row whose name resolves to no registered leaf = schema drift
+    drift = tmp_path / "BENCH_drift.json"
+    drift.write_text(json.dumps(dict(
+        doc, rows=doc["rows"] +
+        [{"name": "fig5/bogus_leaf", "value": 1.0, "derived": ""}])))
+    p = _bench_diff("--fresh", str(drift))
+    assert p.returncode == 1
+    assert "unregistered leaf" in p.stderr

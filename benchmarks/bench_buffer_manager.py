@@ -1,9 +1,18 @@
 """Paper Fig. 5: the YCSB design ladder, with the paper's own analytic
-model predictions printed next to each measurement (§3.2 methodology)."""
+model predictions printed next to each measurement (§3.2 methodology).
+
+Also the ROADMAP gap-(b) companion: plain B-tree range scans over the
+raw NVMe namespace, regular read vs io_uring-cmd passthrough
+(``fig5/scan/*``), reporting the block-size CROSSOVER — passthrough
+skips the generic kernel storage stack, a per-op CPU cost, so it pays
+at small blocks and washes out once the scan goes bandwidth-bound."""
 
 from dataclasses import replace
 
 from benchmarks.common import emit, emit_attribution, section
+from repro.core import IoUring, SetupFlags, SimNVMe, Timeline
+from repro.core import ring as R
+from repro.core.backends import DATA_FD, KiB
 from repro.core.perfmodel import (CycleModel, LatencyModel, PAPER_C_TX,
                                   PAPER_C_READ_BATCH, PAPER_C_READ_SINGLE,
                                   PAPER_C_WRITE_BATCH)
@@ -15,7 +24,40 @@ PAPER_TPS = {"posix": 16.5, "io_uring": 16.5, "+BatchEvict": 19.0,
              "+Passthru": 300.0, "+IOPoll": 376.0, "+SQPoll": 546.5}
 
 
-def run(n_txns: int = 2500):
+def _scan_gibs(bs: int, passthru: bool, scan_bytes: int,
+               depth: int = 32) -> float:
+    """Sequential scan throughput (GiB/s) at one block size, queue
+    depth ``depth``, over a raw (filesystem-less) NVMe namespace."""
+    tl = Timeline()
+    ring = IoUring(tl, setup=SetupFlags.DEFER_TASKRUN)
+    ring.register_device(DATA_FD, SimNVMe(tl))
+    n = max(8, scan_bytes // bs)
+    buf = bytearray(bs)
+    spec = SimNVMe(tl).spec
+    stripe, n_ssds = 4 * KiB, spec.n_ssds
+    done = inflight = i = 0
+    while done < n:
+        while inflight < depth and i < n:
+            sqe = ring.get_sqe()
+            if sqe is None:
+                break
+            # stripe-align each block so the sequential scan
+            # round-robins the SSD array (what a striped extent layout
+            # produces) instead of aliasing onto one device
+            pad = (i - i * (bs // stripe)) % n_ssds
+            R.prep_read(sqe, DATA_FD, buf, i * bs + pad * stripe, bs)
+            if passthru:
+                sqe.cmd = "passthru"
+            i += 1
+            inflight += 1
+        ring.submit()
+        ring.wait_cqe()
+        done += 1
+        inflight -= 1
+    return n * bs / tl.now / 2**30
+
+
+def run(n_txns: int = 2500, scan_bytes: int = 64 << 20):
     section("buffer manager YCSB ladder (paper Fig. 5)")
     fault = None
     for cfg in EngineConfig.ladder():
@@ -45,3 +87,19 @@ def run(n_txns: int = 2500):
              f"fault={fault:.2f} batch_eff={res['batch_eff']:.1f}")
         emit_attribution(f"fig5/{cfg.name}", res["attribution"],
                          res["app_cpu_s"] + res["sqpoll_cpu_s"])
+
+    section("B-tree scan passthrough crossover (fig5/scan)")
+    crossover = None
+    for bs_kib in (4, 16, 64, 256, 512):
+        bs = bs_kib * KiB
+        g_reg = _scan_gibs(bs, False, scan_bytes)
+        g_pt = _scan_gibs(bs, True, scan_bytes)
+        sp = g_pt / g_reg
+        emit(f"fig5/scan/bs={bs_kib}KiB/regular/gib_s", round(g_reg, 2))
+        emit(f"fig5/scan/bs={bs_kib}KiB/passthru/gib_s", round(g_pt, 2),
+             f"speedup={sp:.2f}x")
+        if crossover is None and sp < 1.10:
+            crossover = bs_kib
+    emit("fig5/scan/passthru_crossover_kib", crossover or 512,
+         "smallest block size where the passthru win falls under 10% "
+         "(scan goes bandwidth-bound; io_uring-cmd only pays below)")

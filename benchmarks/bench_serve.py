@@ -1,0 +1,103 @@
+"""Serving-tier KV paging: decode ladder + open-loop token SLO.
+
+``serve/ladder/<rung>``: miss-heavy long-context decode over the
+pager's buffer pool.  The config is GUARANTEED-MISS — each sequence's
+walk (128 blocks) exceeds the 96-frame HBM pool, so every rung faults
+on every block regardless of interleave, and only 16 of the backing
+pages fit the host-DRAM spill tier: misses hit the NVMe cold tier at
+its 70 us read latency.  That pins the ladder's two regimes:
+
+* sync / +Batch / +RegBufs are LATENCY-bound — demand misses serialize
+  into every token, ring CPU savings buy nothing (the paper's "when
+  NOT to use it");
+* +Prefetch(k) overlaps the spill reads with decode via read-ahead
+  fibers and makes the pager CPU-bound, where +PassthruRead's
+  storage-stack bypass (io_uring-cmd reads) shows up as tokens/s.
+
+``serve/slo/rate=<r>``: the top rung under open-loop Poisson decode
+arrivals (repro.observe.slo) — arrival-to-emit token latency vs a
+declared p99 SLO, with bounded-queue shedding past saturation.  Same
+rates in smoke and full runs so rows line up for bench_diff.
+"""
+
+from collections import deque
+
+from benchmarks.common import emit, emit_attribution, section
+from repro.observe import slo
+from repro.serve.kv_paging import KVPager, PagerConfig
+
+#: calibrated miss-heavy geometry (see module docstring); n_seqs * k
+#: = 64 prefetched frames stay within ~0.75x of the 96-frame pool
+LADDER_KW = dict(prefetch_k=8, n_hbm_pages=96, host_pages=16,
+                 nvme_pages=2048, page_tokens=16, head_dim=32)
+N_SEQS, N_BLOCKS = 8, 128
+
+#: offered decode rates (tokens/s): comfortable, busy, past saturation
+#: (closed-loop top-rung capacity is ~3.3k tok/s — the top rate
+#: overloads it, showing the queueing knee and the shed path)
+SERVE_RATES = (1_000, 2_500, 5_000)
+SERVE_SLO = dict(slo_p99_us=20_000.0)
+
+
+def _mk_pager(cfg: PagerConfig) -> KVPager:
+    p = KVPager(cfg)
+    p.prefill(n_seqs=N_SEQS, n_blocks=N_BLOCKS, seed=1)
+    return p
+
+
+def _decode_txn_for(pager: KVPager):
+    """One 'transaction' = one decode step; sequences are leased from
+    a free list so at most n_seqs decodes run concurrently."""
+    free = deque(pager.seqs)
+
+    def make_txn(rng):
+        def txn():
+            s = free.popleft()
+            try:
+                yield from pager.decode_step(s)
+            finally:
+                free.append(s)
+        return txn()
+    return make_txn
+
+
+def run(n_tokens: int = 4, duration_s: float = 0.1):
+    section("KV-paging serving ladder (serve/ladder)")
+    base = None
+    for cfg in PagerConfig.ladder(**LADDER_KW):
+        p = _mk_pager(cfg)
+        r = p.run_decode(n_tokens=n_tokens)
+        if base is None:
+            base = r["tok_s"]
+        emit(f"serve/ladder/{cfg.name}/tok_s", round(r["tok_s"]),
+             f"x={r['tok_s'] / base:.2f} demand={r['demand_faults']} "
+             f"prefetch={r['prefetch_reads']} cold={r['cold_reads']} "
+             f"passthru={r['passthru_cmds']} "
+             f"batch_eff={r['batch_eff']:.1f}")
+        emit(f"serve/ladder/{cfg.name}/p50_us", round(r["p50_us"], 1),
+             "token latency")
+        emit(f"serve/ladder/{cfg.name}/p99_us", round(r["p99_us"], 1))
+        emit_attribution(f"serve/ladder/{cfg.name}", r["attribution"],
+                         r["app_cpu_s"] + r["sqpoll_cpu_s"])
+
+    section("open-loop decode vs token SLO (serve/slo)")
+    top = PagerConfig.ladder(**LADDER_KW)[-1]
+    rows = slo.sweep(lambda: _mk_pager(top), _decode_txn_for,
+                     rates=list(SERVE_RATES), duration_s=duration_s,
+                     n_workers=N_SEQS, queue_cap=64, **SERVE_SLO)
+    for r in rows:
+        name = f"serve/slo/rate={r['rate_tps']:.0f}"
+        note = (f"offered={r['offered']} completed={r['completed']} "
+                f"achieved={r['achieved_tps']:.0f}/s")
+        emit(f"{name}/p50_us", round(r["p50_us"], 1))
+        emit(f"{name}/p99_us", round(r["p99_us"], 1),
+             f"slo={SERVE_SLO['slo_p99_us']:.0f}us")
+        emit(f"{name}/p999_us", round(r["p999_us"], 1))
+        emit(f"{name}/mean_us", round(r["mean_us"], 1))
+        emit(f"{name}/achieved_tps", round(r["achieved_tps"]), note)
+        emit(f"{name}/dropped", r["dropped"],
+             f"of {r['offered']} offered (bounded arrival queue)")
+        emit(f"{name}/drop_frac", round(r["drop_frac"], 4))
+        emit(f"{name}/slo_met", int(r["slo_met"]),
+             "1 = p99 within SLO and <1% shed")
+    emit("serve/slo/slo_p99_us", SERVE_SLO["slo_p99_us"], "declared")

@@ -52,6 +52,7 @@ LEAF_SPECS = {
     # throughput / bandwidth
     "tps":              _m("txn/s", True, True, 5.0),
     "achieved_tps":     _m("txn/s", True, True, 5.0),
+    "tok_s":            _m("tok/s", True, True, 5.0),
     "miops":            _m("Miops", True, True, 4.0),
     "gib_s":            _m("GiB/s", True, True, 4.0),
     "mem_gib_s":        _m("GiB/s", False, True, 4.0),
@@ -87,6 +88,8 @@ LEAF_SPECS = {
     "mean_apply_lag_b": _m("bytes", False, False),
     "missing":          _m("count", None, False),
     "skipped":          _m("count", None, False),
+    # quantized to the swept block-size grid: never smoke-compared
+    "passthru_crossover_kib": _m("KiB", None, False),
     # kernel-cost attribution (microseconds; scales with run size)
     "attr/total":       _m("us", False, False),
     "attr/<cat>":       _m("us", False, False),

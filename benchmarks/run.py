@@ -35,13 +35,14 @@ MODULES = [
     ("fig15-16", "benchmarks.bench_sendrecv"),
     ("fig17", "benchmarks.bench_guidelines"),
     ("slo", "benchmarks.bench_slo"),
+    ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
 #: per-module kwargs for --smoke; modules without an entry are cheap
 #: enough to run with their defaults (a few seconds each)
 SMOKE_KW = {
-    "fig5": {"n_txns": 120},
+    "fig5": {"n_txns": 120, "scan_bytes": 8 << 20},
     # fig6 needs enough txns that warmup doesn't dominate tps — the
     # regression gate compares these values against the committed
     # full-size snapshot (scripts/bench_diff.py tolerance bands)
@@ -54,6 +55,10 @@ SMOKE_KW = {
     # SAME offered rates as the full run (row names must line up for
     # bench_diff), just a shorter window and a smaller table
     "slo": {"duration_s": 0.04, "n_tuples": 8_000},
+    # SAME ladder config and offered rates as the full run (the ladder
+    # is deterministic and already small); only the open-loop window
+    # shrinks
+    "serve": {"duration_s": 0.03},
 }
 
 

@@ -27,24 +27,42 @@ def main():
     print("batched generate:", out.shape)
     print("first request tokens:", np.asarray(out[0]))
 
-    # --- paged KV with host offload (the buffer manager for serving) ----
+    # --- paged KV on the buffer pool (the buffer manager for serving) --
     pcfg = PagerConfig(n_hbm_pages=16, page_tokens=16, kv_heads=2,
                        head_dim=32)
     pager = KVPager(pcfg)
     for blk in range(48):                      # 3x oversubscription
         kp = jax.random.normal(jax.random.fold_in(key, blk),
                                (16, 2, 32), jnp.bfloat16)
-        pager.write_page((0, 0, blk), kp, kp)
+        pager.put_page_sync((0, blk), kp, kp)
     print(f"pager: hbm_pages={pcfg.n_hbm_pages} written=48 "
-          f"spilled_to_host={pager.next_host_page} faults={pager.faults}")
-    slots = [pager.fix_page((0, 0, b)) for b in (0, 13, 26, 39)]
+          f"spilled={pager.spilled_pages()} faults={pager.faults} "
+          f"writebacks={pager.pool.writebacks}")
+    slots = [pager.fix_page_sync((0, b)) for b in (0, 13, 26, 39)]
+    k_pool, v_pool = pager.device_pools()
     q = jax.random.normal(key, (1, 4, 32), jnp.float32)
-    out = paged_attention(q, pager.k_pool.astype(jnp.float32),
-                          pager.v_pool.astype(jnp.float32),
+    out = paged_attention(q, k_pool.astype(jnp.float32),
+                          v_pool.astype(jnp.float32),
                           jnp.asarray([slots], jnp.int32),
                           jnp.asarray([64], jnp.int32), interpret=True)
+    for s in slots:
+        pager.pool.unfix(s)
     print("paged attention over spilled+restored pages:", out.shape,
           f"faults={pager.faults} ring_enters={pager.ring.stats.enters}")
+
+    # --- the serving ladder on a miss-heavy decode (tiny sweep; the
+    # full calibrated sweep lives in benchmarks/bench_serve.py) --------
+    print("serving ladder (miss-heavy decode, NVMe cold tier):")
+    for c in PagerConfig.ladder(prefetch_k=4, n_hbm_pages=24,
+                                host_pages=8, nvme_pages=256,
+                                page_tokens=8, head_dim=16):
+        p = KVPager(c)
+        p.prefill(n_seqs=2, n_blocks=32, seed=1)
+        r = p.run_decode(n_tokens=2)
+        print(f"  {c.name:>14s} {r['tok_s']:8.0f} tok/s  "
+              f"demand={r['demand_faults']:4d} "
+              f"prefetch={r['prefetch_reads']:4d} "
+              f"passthru={r['passthru_cmds']:4d}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,9 @@
 #   5. an attribution-key diff: every kernel-cost category present in
 #      the committed snapshot's attr rows must still be emitted, and
 #      every attr/total row must say conserved=yes
+#   6. serving-tier gate: the smoke snapshot must carry the full
+#      serve/ladder rung set with a monotone tokens/s ladder (the
+#      +Prefetch rung >= 2x sync) plus the serve/slo rate sweep
 # Throwaway artifacts land in .bench/ (gitignored); committed snapshots
 # are the BENCH_pr<N>.json files at the repo root.
 # Usage: scripts/check.sh [extra pytest args]
@@ -53,6 +56,27 @@ bad = [r["name"] for r in totals if r["derived"] != "conserved=yes"]
 assert not bad, f"attribution not conserved in: {bad}"
 print(f"# attribution OK: {len(have)} categories, "
       f"{len(totals)} sections conserved")
+
+# ---- serving tier: ladder rungs present, monotone, prefetch >= 2x
+RUNGS = ["sync", "+Batch", "+RegBufs", "+Prefetch(8)", "+PassthruRead"]
+tok = {}
+for r in smoke_rows:
+    m = re.fullmatch(r"serve/ladder/([^/]+)/tok_s", r["name"])
+    if m:
+        tok[m.group(1)] = r["value"]
+missing = [g for g in RUNGS if g not in tok]
+assert not missing, f"serve/ladder rungs missing from smoke: {missing}"
+lad = [tok[g] for g in RUNGS]
+for a, b, g in zip(lad, lad[1:], RUNGS[1:]):
+    assert b >= 0.95 * a, \
+        f"serve ladder not monotone at {g}: {b} < 0.95*{a}"
+assert tok["+Prefetch(8)"] >= 2.0 * tok["sync"], \
+    f"prefetch rung below 2x sync: {tok['+Prefetch(8)']} vs {tok['sync']}"
+slo_rates = {r["name"].split("/")[2] for r in smoke_rows
+             if r["name"].startswith("serve/slo/rate=")}
+assert len(slo_rates) >= 3, f"serve/slo sweep too thin: {slo_rates}"
+print(f"# serving OK: ladder {[round(v) for v in lad]} tok/s, "
+      f"{len(slo_rates)} open-loop rates")
 EOF
 python -m benchmarks.run --smoke --only fig9wal \
     --trace .bench/trace_smoke.json > /dev/null

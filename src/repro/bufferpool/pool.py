@@ -81,6 +81,12 @@ class BufferPool:
         # pages cannot be written back until the log is durable up to
         # their page LSN (set by stamp_lsn).
         self.wal = None
+        # multi-tier hook: ``placement(pid) -> (fd, offset, passthru)``
+        # routes a page to its backing device.  None = the classic
+        # single-file layout (cfg.fd, pid*page_size, cfg.passthrough).
+        # The KV pager uses this to split pids between a host-DRAM
+        # spill store and an NVMe cold tier.
+        self.placement = None
         # stats
         self.hits = 0
         self.faults = 0
@@ -133,22 +139,93 @@ class BufferPool:
         m.loading = True
         self.table[pid] = idx
         self.loading_pids.discard(pid)
-        cfg = self.cfg
-        off = pid * cfg.page_size
-
-        def prep(sqe, ud, idx=idx, off=off):
-            if cfg.fixed_bufs:
-                prep_read_fixed(sqe, cfg.fd, cfg.buf_base + idx, off,
-                                cfg.page_size)
-            else:
-                prep_read(sqe, cfg.fd, memoryview(self.frames[idx]), off,
-                          cfg.page_size)
-            if cfg.passthrough:   # URING_CMD: bypass the storage stack
-                sqe.cmd = "passthru"
-        cqe = yield IoRequest(prep)
-        assert cqe.res == cfg.page_size, f"short read {cqe.res}"
+        cqe = yield self._read_req(idx, pid)
+        assert cqe.res == self.cfg.page_size, f"short read {cqe.res}"
         m.loading = False
         return idx
+
+    def fix_new(self, pid: int) -> Generator:
+        """Fiber-style ``adopt_new_page``: allocate a frame for a
+        brand-new page, *yielding* through eviction when the pool is
+        full (unlike ``adopt_new_page``, which can only steal a clean
+        victim).  The page is born dirty and pinned; nothing is read
+        from disk.  Used by the KV pager when a decode step appends a
+        fresh KV block."""
+        assert pid not in self.table and pid not in self.loading_pids \
+            and pid not in self.evicting_pids, f"pid {pid} already live"
+        self.loading_pids.add(pid)       # reserve against concurrent fix
+        try:
+            idx = yield from self._allocate()
+        finally:
+            self.loading_pids.discard(pid)
+        m = self.meta[idx]
+        m.pid = pid
+        m.dirty = True
+        m.ref = True
+        m.pins = 1
+        m.loading = False
+        self.table[pid] = idx
+        self.frames[idx][:] = bytes(self.cfg.page_size)
+        return idx
+
+    def prefetch_many(self, pids) -> Generator:
+        """Read-ahead: fault every absent page of ``pids`` into the pool
+        with ONE batched submission, leaving the frames unpinned
+        (ref=True so the clock sweep gives them a full revolution).
+        Pages already resident, loading, or mid-writeback are skipped —
+        a prefetch must never double-load or read stale disk.  Returns
+        the number of pages actually faulted."""
+        grabbed: List[tuple] = []        # (idx, pid)
+        for pid in pids:
+            if (pid in self.table or pid in self.loading_pids
+                    or pid in self.evicting_pids):
+                continue
+            self.loading_pids.add(pid)
+            try:
+                idx = yield from self._allocate()
+            except BaseException:
+                self.loading_pids.discard(pid)
+                raise
+            m = self.meta[idx]
+            m.pid = pid
+            m.dirty = False
+            m.ref = True
+            m.pins = 0                   # prefetched, not pinned
+            m.loading = True
+            self.table[pid] = idx
+            self.loading_pids.discard(pid)
+            grabbed.append((idx, pid))
+        if not grabbed:
+            return 0
+        self.faults += len(grabbed)
+        cqes = yield [self._read_req(i, p) for i, p in grabbed]
+        for cqe in cqes:
+            assert cqe.res == self.cfg.page_size, f"short read {cqe.res}"
+        for i, _ in grabbed:
+            self.meta[i].loading = False
+        return len(grabbed)
+
+    def _backing(self, pid: int):
+        """(fd, byte offset, passthru?) of a page's backing store."""
+        if self.placement is not None:
+            return self.placement(pid)
+        cfg = self.cfg
+        return cfg.fd, pid * cfg.page_size, cfg.passthrough
+
+    def _read_req(self, idx: int, pid: int) -> IoRequest:
+        cfg = self.cfg
+        fd, off, pthru = self._backing(pid)
+
+        def prep(sqe, ud, idx=idx, fd=fd, off=off, pthru=pthru):
+            if cfg.fixed_bufs:
+                prep_read_fixed(sqe, fd, cfg.buf_base + idx, off,
+                                cfg.page_size)
+            else:
+                prep_read(sqe, fd, memoryview(self.frames[idx]), off,
+                          cfg.page_size)
+            if pthru:             # URING_CMD: bypass the storage stack
+                sqe.cmd = "passthru"
+        return IoRequest(prep)
 
     def unfix(self, idx: int, dirty: bool = False) -> None:
         m = self.meta[idx]
@@ -330,16 +407,16 @@ class BufferPool:
 
     def _write_req(self, idx: int) -> IoRequest:
         cfg = self.cfg
-        off = self.meta[idx].pid * cfg.page_size
+        fd, off, pthru = self._backing(self.meta[idx].pid)
 
-        def prep(sqe, ud, idx=idx, off=off):
+        def prep(sqe, ud, idx=idx, fd=fd, off=off, pthru=pthru):
             if cfg.fixed_bufs:
-                prep_write_fixed(sqe, cfg.fd, cfg.buf_base + idx, off,
+                prep_write_fixed(sqe, fd, cfg.buf_base + idx, off,
                                  cfg.page_size)
             else:
-                prep_write(sqe, cfg.fd, memoryview(self.frames[idx]), off,
+                prep_write(sqe, fd, memoryview(self.frames[idx]), off,
                            cfg.page_size)
-            if cfg.passthrough:
+            if pthru:
                 sqe.cmd = "passthru"
         return IoRequest(prep)
 

@@ -23,6 +23,36 @@ from repro.core.sqe import SQE, Op, SqeFlags, EAGAIN, EINVAL
 KiB = 1024
 MiB = 1024 * KiB
 
+# ---------------------------------------------------------------------------
+# Named device-registration slots
+# ---------------------------------------------------------------------------
+# Every subsystem registers its backing device on the ring under a fixed
+# NAMED fd, so traces and bench rows stay readable and no two subsystems
+# collide on a magic number (the KV pager used to hard-code "5").  The
+# storage engine re-exports DATA_FD/LOG_FD; the serving tier uses the
+# KV_* slots.
+
+DATA_FD = 3        # B-tree data file (repro.storage.engine)
+LOG_FD = 4         # WAL log device (repro.wal)
+KV_HOST_FD = 5     # serving tier: host-DRAM KV spill store
+KV_NVME_FD = 6     # serving tier: NVMe cold tier (raw namespace)
+
+
+def host_dram_spec() -> "NVMeSpec":
+    """The serving tier's host-DRAM spill store: CXL/NUMA-interleaved
+    DRAM reached through the ring — microsecond latency, memory-class
+    bandwidth.  A factory (specs are mutable dataclasses): every pager
+    gets its own instance."""
+    return NVMeSpec(read_lat=1.5e-6, write_lat=1.0e-6,
+                    n_ssds=4, iops_per_ssd=1e7,
+                    read_bw=50e9, write_bw=50e9)
+
+
+def kv_nvme_spec() -> "NVMeSpec":
+    """The serving tier's cold tier: the paper's Kioxia CM7-R array at
+    its Table 1 constants (the same device the storage engine runs on)."""
+    return NVMeSpec()
+
 
 # ---------------------------------------------------------------------------
 # Simulated NVMe SSD array (paper §3, Table 1/2, Fig. 7/8)

@@ -345,6 +345,7 @@ class IoUring:
             if not dev.supports_passthrough():
                 self._complete(sqe, EINVAL, CqeFlags.INLINE, then)
                 return
+            self.stats.passthru_cmds += 1
         else:
             self._charge(c.storage_stack, on_sqpoll, "storage_stack", cls)
         self._charge(c.submit_floor_write if write else c.submit_floor_read,

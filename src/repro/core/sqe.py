@@ -204,6 +204,8 @@ class RingStats:
     buf_ring_exhausted: int = 0    # recvs terminated for lack of a buffer
     sends_copied: int = 0          # non-ZC sends that bounced (advisor)
     send_bytes_copied: int = 0     # bytes those sends copied
+    passthru_cmds: int = 0         # ops issued as NVMe io_uring-cmd
+                                   # (passthrough reads/writes/flushes)
     # kernel-cost attribution (seconds; see class docstring)
     attribution: Dict[str, float] = field(default_factory=dict)
     op_attribution: Dict[str, Dict[str, float]] = field(

@@ -24,6 +24,10 @@ BENCH snapshots show fixing it:
   irq-completions         complete_irq share (GL4)      +IOPoll
   speculative-recv-miss   sock_speculative share        POLL_FIRST
   buf-ring-exhaustion     terminated multishot recvs    larger buffer ring
+  host-spill-bound        pager demand reads stall      +Prefetch(k)
+                          decode, no read-ahead
+  pager-read-bounce       pin_copy share on a paging    +RegBufs
+                          read path (GL4)
 
 ``shared-ring-lock`` carries a structural severity boost: *any*
 measurable ring-lock share means several cores are submitting to one
@@ -55,6 +59,11 @@ class RingReport:
     sends_copied: int = 0
     send_bytes_copied: int = 0
     buf_ring_exhausted: int = 0
+    # serving-tier pager signals (repro.serve.kv_paging result dicts);
+    # pager_reads == 0 keeps the pager rules quiet for non-serving rings
+    pager_reads: int = 0
+    read_wait_frac: float = 0.0
+    prefetch_depth: int = -1
 
     def share(self, cat: str) -> float:
         total = sum(self.attribution.values())
@@ -110,7 +119,10 @@ def report_from_result(res: dict) -> RingReport:
         worker_fallbacks=res.get("worker_fallbacks", 0),
         sends_copied=res.get("sends_copied", 0),
         send_bytes_copied=res.get("send_bytes_copied", 0),
-        buf_ring_exhausted=res.get("buf_ring_exhausted", 0))
+        buf_ring_exhausted=res.get("buf_ring_exhausted", 0),
+        pager_reads=res.get("pager_reads", 0),
+        read_wait_frac=res.get("read_wait_frac", 0.0),
+        prefetch_depth=res.get("prefetch_k", -1))
 
 
 def diagnose(rep: RingReport) -> List[Finding]:
@@ -190,6 +202,24 @@ def diagnose(rep: RingReport) -> List[Finding]:
             "§4.1 skip the speculative inline recv attempt", s,
             f"wasted speculative recv attempts are {s:.0%} of kernel "
             f"CPU"))
+
+    if rep.pager_reads > 0 and rep.prefetch_depth == 0 \
+            and rep.read_wait_frac > 0.35:
+        out.append(Finding(
+            "host-spill-bound", "+Prefetch(k)",
+            "§3.4 overlap spill reads with compute (read-ahead fibers)",
+            rep.read_wait_frac,
+            f"decode fibers spend {rep.read_wait_frac:.0%} of their "
+            f"time blocked on demand pager reads and no read-ahead is "
+            f"configured: spill latency is serialized into every token"))
+
+    s = rep.share("pin_copy")
+    if rep.pager_reads > 0 and s > 0.02:
+        out.append(Finding(
+            "pager-read-bounce", "+RegBufs",
+            "§3.4.1 registered frames for the paging read path (GL4)", s,
+            f"{rep.pager_reads} pager reads paid per-op pin+copy "
+            f"({s:.0%} of kernel CPU): KV frames are not registered"))
 
     if rep.buf_ring_exhausted > 0:
         out.append(Finding(

@@ -1,2 +1,2 @@
 from repro.serve.loop import ServeLoop
-from repro.serve.kv_paging import KVPager
+from repro.serve.kv_paging import KVPager, PagerConfig, SeqState

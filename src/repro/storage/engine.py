@@ -66,7 +66,7 @@ from repro.bufferpool import BufferPool, PartitionedBufferPool, PoolConfig
 from repro.core import (AdaptiveBatcher, AdaptiveFlush, CoreClock,
                         EagerSubmit, FiberScheduler, IoUring, NVMeSpec,
                         SetupFlags, Timeline)
-from repro.core.backends import SimDisk
+from repro.core.backends import DATA_FD, LOG_FD, SimDisk
 from repro.observe import metrics as _metrics
 from repro.storage.btree import BTree, bulk_load
 from repro.wal.group_commit import GroupCommit, MultiCoreGroupCommit
@@ -74,8 +74,9 @@ from repro.wal.log import (APPLY_DELTA, APPLY_IMG, LogHeader, RecordType,
                            WriteAheadLog, encode_apply, encode_checkpoint,
                            encode_kv, encode_record)
 
-DATA_FD = 3
-LOG_FD = 4
+# DATA_FD / LOG_FD re-exported from repro.core.backends — the named
+# device-registration slots are shared with the serving tier (KV_HOST_FD,
+# KV_NVME_FD) so no two subsystems collide on a magic fd.
 
 #: durability config -> WAL flush path (paper Fig. 9)
 _DURABILITY_MODES = {

@@ -1,0 +1,229 @@
+"""Fault-injection sweeps (repro.core.faults): what error recovery
+costs, and proof that it never costs durability.
+
+  faults/wal       fault-intensity sweep on +GroupCommit — the same
+                   YCSB update workload at per-op fault rates 0, 0.5%
+                   and 2% (transient EIO on reads/writes, fsync
+                   failures, short reads, latency spikes).  Rows:
+                   txn p99/p999, goodput (committed txn/s), retry and
+                   injection tallies.  The rate=0 run must be BIT-
+                   IDENTICAL to the no-fault-plane baseline (an
+                   all-zero spec builds no plane and consumes no RNG)
+                   — asserted here, not just banded.
+
+  faults/passthru  +PassthruFlush under NVMe passthrough ENOTSUP /
+                   timeout faults: the pool's read path and the WAL's
+                   flush path degrade to the regular read / linked
+                   write->fsync path, counted as fallbacks (>= 1
+                   asserted — the degrade path must actually run).
+
+  faults/semisync  +SemiSync under a scripted link-flap storm with an
+                   ack-timeout watchdog: the sender reconnects with
+                   backoff and re-ships from the acked horizon, and
+                   the cluster degrades to async acking rather than
+                   stall commits (degrades >= 1 asserted), then
+                   re-promotes once the standby catches up.
+
+  faults/storm     the durability audit: crash the engine MID-STORM
+                   (2% write EIO + 1% fsync failures + 1% read EIO),
+                   run redo recovery on the frozen images, and count
+                   acked txns missing from the winner set.  The
+                   acked_lost row must be 0 — scripts/check.sh fails
+                   the build otherwise (the fsyncgate property:
+                   a commit whose fsync failed is never acked until a
+                   fully-successful retry made it durable).
+
+short_write is deliberately 0 on engine sweeps: a torn DATA page
+(fresh LSN header, stale tail) defeats LSN-gated redo by design —
+see docs/robustness.md.  Short WAL writes are covered by the CRC
+framing and exercised in tests/test_faults.py.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, emit_attribution, section
+from repro.core import NVMeSpec
+from repro.core.faults import FaultSpec
+from repro.observe.advisor import diagnose, report_from_result
+from repro.storage.engine import EngineConfig, StorageEngine
+from repro.storage.workloads import ycsb_update_txn
+from repro.wal import recover
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+
+#: per-op fault intensity grid for the faults/wal sweep; labels are
+#: the row parameter so smoke and full runs line up.  The top rate is
+#: high enough that even a 96-txn smoke run injects a storm the
+#: advisor must flag.
+RATES = [("0", 0.0), ("0.01", 0.01), ("0.05", 0.05)]
+
+
+def _engine(durability, *, faults=None, passthrough=False, n_fibers=64,
+            n_tuples=50_000, frames=1024):
+    cfg = EngineConfig(
+        "+GroupCommit" if durability == "group" else "+PassthruFlush",
+        n_fibers=n_fibers, pool_frames=frames, durability=durability,
+        fixed_bufs=True, passthrough=passthrough, faults=faults)
+    return StorageEngine(cfg, n_tuples=n_tuples,
+                         spec=NVMeSpec(**ENTERPRISE))
+
+
+def _timed(eng, lat):
+    """Wrap the YCSB txn with sim-time stamps so the sweep can report
+    whole-txn latency percentiles (commit wait + retry backoff)."""
+    def txn(rng):
+        t0 = eng.tl.now
+        yield from ycsb_update_txn(eng, rng)
+        lat.append(eng.tl.now - t0)
+    return txn
+
+
+def _pct(lat, q):
+    xs = sorted(lat)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] * 1e6
+
+
+def _retries(res):
+    return (res.get("wal_io_retries", 0) +
+            res.get("pool_read_retries", 0) +
+            res.get("pool_write_retries", 0))
+
+
+def run(n_txns: int = 512):
+    section("fault-intensity sweep, +GroupCommit (faults/wal)")
+    baseline = None
+    for label, r in RATES:
+        spec = FaultSpec(seed=7, read_eio=r, write_eio=r, fsync_fail=r,
+                         short_read=r, latency_spike=r)
+        lat = []
+        eng = _engine("group", faults=spec)
+        res = eng.run_fibers(_timed(eng, lat), n_txns)
+        if label == "0":
+            # an all-zero spec builds NO plane: this run must be
+            # bit-identical to one with faults=None, not merely close
+            blat = []
+            beng = _engine("group")
+            baseline = beng.run_fibers(_timed(beng, blat), n_txns)
+            assert (res["tps"], lat) == (baseline["tps"], blat), \
+                "zero-rate fault spec perturbed the baseline"
+            assert eng.faults is None and "faults_injected" not in res
+        emit(f"faults/wal/rate={label}/p99_us", round(_pct(lat, 0.99), 1),
+             f"p50={_pct(lat, 0.50):.0f}us")
+        emit(f"faults/wal/rate={label}/p999_us",
+             round(_pct(lat, 0.999), 1))
+        emit(f"faults/wal/rate={label}/goodput_tps", round(res["tps"]),
+             f"commits={res.get('commits', 0)}")
+        emit(f"faults/wal/rate={label}/injected",
+             res.get("faults_injected", 0),
+             f"error_cqes={res.get('error_cqes', 0)} "
+             f"short_cqes={res.get('short_cqes', 0)}")
+        emit(f"faults/wal/rate={label}/retries", _retries(res),
+             f"wal={res.get('wal_io_retries', 0)} "
+             f"pool_r={res.get('pool_read_retries', 0)} "
+             f"pool_w={res.get('pool_write_retries', 0)} "
+             f"flush_errors={res.get('wal_flush_errors', 0)}")
+        if r > 0:
+            assert res["faults_injected"] > 0, f"rate {r}: no faults hit"
+    # the advisor must call out the storm at the top intensity
+    findings = diagnose(report_from_result(res))
+    top = findings[0] if findings else None
+    emit("faults/wal/rate=0.05/diagnosis", top.rung if top else "ok",
+         f"rule={top.rule} severity={top.severity:.3f}"
+         if top else "no rule fired")
+    assert any(f.rule == "transient-error-storm" for f in findings), \
+        "advisor missed the 5% error storm"
+    emit_attribution("faults/wal/rate=0.05", res["attribution"],
+                     res["app_cpu_s"] + res["sqpoll_cpu_s"])
+
+    section("NVMe passthrough degrade, +PassthruFlush (faults/passthru)")
+    spec = FaultSpec(seed=11, passthru_enotsup=0.05,
+                     passthru_timeout=0.02)
+    lat = []
+    eng = _engine("passthru-flush", faults=spec, passthrough=True)
+    res = eng.run_fibers(_timed(eng, lat), n_txns)
+    fallbacks = (res.get("passthru_fallbacks", 0) +
+                 res.get("wal_passthru_degrades", 0))
+    assert fallbacks >= 1, "no passthrough op ever degraded"
+    emit("faults/passthru/fallbacks", fallbacks,
+         f"pool={res.get('passthru_fallbacks', 0)} "
+         f"wal={res.get('wal_passthru_degrades', 0)} "
+         f"injected={res.get('faults_injected', 0)}")
+    emit("faults/passthru/goodput_tps", round(res["tps"]),
+         f"p99_us={_pct(lat, 0.99):.0f}")
+
+    section("semisync degrade under link flaps (faults/semisync)")
+    from dataclasses import replace
+
+    from repro.replication import ReplicatedCluster
+    # full-failure window early in the run (every send resets, the
+    # link stays down), then a clean tail so the standby can catch up
+    spec = FaultSpec(seed=3, sock_reset=0.01, flap_duration=100e-6,
+                     windows=((50e-6, 450e-6, {"sock_reset": 1.0}),))
+    ladder = {c.name: c for c in EngineConfig.ladder()}
+    cfg = replace(ladder["+SemiSync"], n_fibers=64, pool_frames=1024,
+                  faults=spec)
+    cl = ReplicatedCluster(cfg, n_tuples=20_000,
+                           spec=NVMeSpec(**ENTERPRISE),
+                           ack_timeout=100e-6)
+    e = cl.primary
+    res = cl.run(lambda rng, en=e: ycsb_update_txn(en, rng), n_txns)
+    assert res["semisync_degrades"] >= 1, \
+        "link-flap storm never tripped the ack-timeout watchdog"
+    emit("faults/semisync/degrades", res["semisync_degrades"],
+         f"repromotions={res['repromotions']} "
+         f"still_degraded={int(cl.degraded)}")
+    emit("faults/semisync/repromotions", res["repromotions"])
+    emit("faults/semisync/resets", res["sock_resets"],
+         f"reconnects={res['repl_reconnects']} "
+         f"send_errors={res['repl_send_errors']} "
+         f"standby_resets={res['standby_conn_resets']} "
+         f"dup_spans={res['dup_spans']}")
+    emit("faults/semisync/commit_us", round(res["commit_wait_us"], 1),
+         f"tps_acked={res['tps_acked']:.0f} acks={res['acks']}")
+    findings = diagnose(report_from_result(res))
+    assert any(f.rule == "semisync-degraded" for f in findings)
+    top = findings[0]
+    emit("faults/semisync/diagnosis", top.rung,
+         f"rule={top.rule} severity={top.severity:.3f}")
+
+    section("crash mid-storm durability audit (faults/storm)")
+    spec = FaultSpec(seed=23, read_eio=0.01, write_eio=0.02,
+                     fsync_fail=0.01, short_read=0.01)
+    eng = _engine("group", faults=spec, n_fibers=32, n_tuples=8_000,
+                  frames=128)
+    acked = []
+
+    def fiber(fid):
+        rng = np.random.default_rng(1000 + fid)
+        while True:
+            t = eng.begin()
+            key = fid * 250 + int(rng.integers(0, 250))
+            val = bytes(eng.cfg.value_size)
+            yield from t.update(key, val)
+            yield from eng.commit(t)
+            acked.append(t.id)
+
+    for fid in range(32):
+        eng.sched.spawn(fiber(fid))
+    budget = {"left": 6000}          # fixed step budget: crash point is
+                                     # deterministic, mid-storm
+
+    def out_of_budget():
+        budget["left"] -= 1
+        return budget["left"] <= 0
+    eng.sched.run(until=out_of_budget)
+    assert acked, "storm run acked nothing before the crash"
+    data, log = eng.crash_images()
+    rec, rep = recover(data, log, pool_frames=512)
+    lost = sorted(set(acked) - rep.winners)
+    emit("faults/storm/acked_lost", len(lost),
+         f"acked={len(acked)} winners={len(rep.winners)} "
+         f"injected={eng.faults.total_injected} MUST be 0")
+    assert not lost, f"acked txns lost under fault storm: {lost[:5]}"
+    emit("faults/storm/injected", eng.faults.total_injected,
+         " ".join(f"{c}={n}" for c, n in sorted(eng.faults.injected.items())
+                  if n))
+    emit("faults/storm/retries",
+         eng.wal.stats.io_retries + eng.pool.read_retries +
+         eng.pool.write_retries,
+         f"flush_errors={eng.wal.stats.flush_errors}")

@@ -90,6 +90,21 @@ LEAF_SPECS = {
     "skipped":          _m("count", None, False),
     # quantized to the swept block-size grid: never smoke-compared
     "passthru_crossover_kib": _m("KiB", None, False),
+    # fault-injection plane (bench_faults): goodput is the committed-txn
+    # rate under injected faults (same meaning as tps, so same band);
+    # the rest are injection/recovery tallies that scale with run size
+    "goodput_tps":      _m("txn/s", True, True, 5.0),
+    "injected":         _m("count", None, False),
+    "retries":          _m("count", None, False),
+    "error_cqes":       _m("count", None, False),
+    "fallbacks":        _m("count", None, False),
+    "degrades":         _m("count", None, False),
+    "repromotions":     _m("count", None, False),
+    "resets":           _m("count", None, False),
+    # acked-durability audit: acked txns whose effects are missing
+    # after crash+recovery under a fault storm.  MUST be zero — the
+    # check.sh fault-smoke step asserts it on every run.
+    "acked_lost":       _m("txn", False, False),
     # kernel-cost attribution (microseconds; scales with run size)
     "attr/total":       _m("us", False, False),
     "attr/<cat>":       _m("us", False, False),

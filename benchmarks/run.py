@@ -37,6 +37,7 @@ MODULES = [
     ("slo", "benchmarks.bench_slo"),
     ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("faults", "benchmarks.bench_faults"),
 ]
 
 #: per-module kwargs for --smoke; modules without an entry are cheap
@@ -59,6 +60,9 @@ SMOKE_KW = {
     # is deterministic and already small); only the open-loop window
     # shrinks
     "serve": {"duration_s": 0.03},
+    # SAME fault rates as the full run (row names must line up and the
+    # degrade/fallback assertions must still trip); fewer txns
+    "faults": {"n_txns": 96},
 }
 
 

@@ -17,6 +17,10 @@
 #   6. serving-tier gate: the smoke snapshot must carry the full
 #      serve/ladder rung set with a monotone tokens/s ladder (the
 #      +Prefetch rung >= 2x sync) plus the serve/slo rate sweep
+#   7. fault-smoke gate: the fault-injection sweep must actually have
+#      injected faults (nonzero rate rows), the degrade paths must have
+#      fired (semisync degrade, passthrough fallback), and the
+#      crash-mid-storm durability audit must report ZERO acked-txn loss
 # Throwaway artifacts land in .bench/ (gitignored); committed snapshots
 # are the BENCH_pr<N>.json files at the repo root.
 # Usage: scripts/check.sh [extra pytest args]
@@ -77,6 +81,25 @@ slo_rates = {r["name"].split("/")[2] for r in smoke_rows
 assert len(slo_rates) >= 3, f"serve/slo sweep too thin: {slo_rates}"
 print(f"# serving OK: ladder {[round(v) for v in lad]} tok/s, "
       f"{len(slo_rates)} open-loop rates")
+
+# ---- fault plane: storm injected, degrades fired, zero acked loss
+vals = {r["name"]: r["value"] for r in smoke_rows
+        if r["name"].startswith("faults/")}
+assert vals, "no faults/* rows in the smoke snapshot"
+inj = [v for n, v in vals.items()
+       if re.fullmatch(r"faults/wal/rate=0\.\d+/injected", n)]
+assert inj and all(v > 0 for v in inj), \
+    f"nonzero-rate fault rows injected nothing: {inj}"
+assert vals.get("faults/semisync/degrades", 0) >= 1, \
+    "semisync degrade path never fired under the link-flap storm"
+assert vals.get("faults/passthru/fallbacks", 0) >= 1, \
+    "passthrough fallback path never fired"
+assert "faults/storm/acked_lost" in vals, "durability audit row missing"
+assert vals["faults/storm/acked_lost"] == 0, \
+    f"ACKED TXN LOSS under fault storm: {vals['faults/storm/acked_lost']}"
+print(f"# faults OK: {sum(inj)} injected in the wal sweep, "
+      f"degrades={vals['faults/semisync/degrades']}, "
+      f"fallbacks={vals['faults/passthru/fallbacks']}, acked_lost=0")
 EOF
 python -m benchmarks.run --smoke --only fig9wal \
     --trace .bench/trace_smoke.json > /dev/null

@@ -24,6 +24,7 @@ from typing import Dict, Generator, List, Optional
 from repro.core import IoRequest
 from repro.core.ring import (prep_read, prep_read_fixed, prep_write,
                              prep_write_fixed)
+from repro.core.sqe import ENOTSUP, ETIME
 
 PAGE = 4096
 
@@ -93,6 +94,18 @@ class BufferPool:
         self.evictions = 0
         self.writebacks = 0
         self.wal_waits = 0               # evictions that had to flush WAL
+        # error-recovery surfaces (fault plane): reads re-issued after
+        # an error/short CQE; writebacks whose frame was kept dirty
+        # after a failed write (eviction must not lose data); passthru
+        # reads degraded to the regular read path (ENOTSUP/timeout)
+        self.read_retries = 0
+        self.write_retries = 0
+        self.passthru_fallbacks = 0
+        # CQE -> frame mapping for batched I/O under faults: prep
+        # closures record their ud here; never cleared wholesale
+        # (concurrent fibers' evictions interleave), entries are popped
+        # as their CQEs come back
+        self._req_frame: Dict[int, tuple] = {}
 
     # ------------------------------------------------------------------
 
@@ -139,8 +152,7 @@ class BufferPool:
         m.loading = True
         self.table[pid] = idx
         self.loading_pids.discard(pid)
-        cqe = yield self._read_req(idx, pid)
-        assert cqe.res == self.cfg.page_size, f"short read {cqe.res}"
+        yield from self._read_page(idx, pid)
         m.loading = False
         return idx
 
@@ -199,9 +211,10 @@ class BufferPool:
             return 0
         self.faults += len(grabbed)
         cqes = yield [self._read_req(i, p) for i, p in grabbed]
-        for cqe in cqes:
-            assert cqe.res == self.cfg.page_size, f"short read {cqe.res}"
-        for i, _ in grabbed:
+        for cqe in cqes:               # CQEs arrive in completion order:
+            i, p = self._req_frame.pop(cqe.user_data)   # map via ud
+            if cqe.res != self.cfg.page_size:
+                yield from self._read_page(i, p, res0=cqe.res)
             self.meta[i].loading = False
         return len(grabbed)
 
@@ -212,11 +225,19 @@ class BufferPool:
         cfg = self.cfg
         return cfg.fd, pid * cfg.page_size, cfg.passthrough
 
-    def _read_req(self, idx: int, pid: int) -> IoRequest:
+    #: read-repair budget: errored/short page reads are re-issued up to
+    #: this many times before the pool gives up (reads are idempotent,
+    #: so the only cost of a retry is latency)
+    MAX_READ_RETRIES = 8
+
+    def _read_req(self, idx: int, pid: int,
+                  pthru_override: Optional[bool] = None) -> IoRequest:
         cfg = self.cfg
         fd, off, pthru = self._backing(pid)
+        if pthru_override is not None:
+            pthru = pthru_override
 
-        def prep(sqe, ud, idx=idx, fd=fd, off=off, pthru=pthru):
+        def prep(sqe, ud, idx=idx, pid=pid, fd=fd, off=off, pthru=pthru):
             if cfg.fixed_bufs:
                 prep_read_fixed(sqe, fd, cfg.buf_base + idx, off,
                                 cfg.page_size)
@@ -225,7 +246,44 @@ class BufferPool:
                           cfg.page_size)
             if pthru:             # URING_CMD: bypass the storage stack
                 sqe.cmd = "passthru"
+            self._req_frame[ud] = (idx, pid)
         return IoRequest(prep)
+
+    def _read_page(self, idx: int, pid: int,
+                   res0: Optional[int] = None) -> Generator:
+        """Read page ``pid`` into frame ``idx``, retrying errored or
+        short completions (recovery policy: reads are idempotent, so
+        re-issue the whole page up to ``MAX_READ_RETRIES`` times).  A
+        passthrough read that fails with ENOTSUP or a device timeout is
+        degraded to the regular read path — counted once per page in
+        ``passthru_fallbacks`` — mirroring a real engine falling back
+        from io_uring-cmd to plain reads on kernels/devices without
+        passthrough support.  ``res0`` carries the result of an
+        already-completed first attempt (batched prefetch)."""
+        pthru_override: Optional[bool] = None
+        attempt = 0
+        res = res0
+        while True:
+            if res is None:
+                cqe = yield self._read_req(idx, pid, pthru_override)
+                self._req_frame.pop(cqe.user_data, None)
+                res = cqe.res
+            if res == self.cfg.page_size:
+                return
+            if res in (ENOTSUP, ETIME) and pthru_override is None \
+                    and self._backing(pid)[2]:
+                # degrade this page's read to the non-passthru path
+                pthru_override = False
+                self.passthru_fallbacks += 1
+                if self.ring is not None:
+                    self.ring.stats.passthru_fallbacks += 1
+            attempt += 1
+            if attempt > self.MAX_READ_RETRIES:
+                raise RuntimeError(
+                    f"page {pid} read failed after "
+                    f"{self.MAX_READ_RETRIES} retries (res={res})")
+            self.read_retries += 1
+            res = None
 
     def unfix(self, idx: int, dirty: bool = False) -> None:
         m = self.meta[idx]
@@ -327,15 +385,28 @@ class BufferPool:
         self.writebacks += len(victims)
         reqs = [self._write_req(i) for i in victims]
         if self.cfg.batch_evict:
-            yield reqs
+            cqes = yield reqs
         else:
+            cqes = []
             for r in reqs:
-                yield r
-        for i in victims:
-            self.meta[i].dirty = False
-            self.meta[i].rec_lsn = 0
-            self.meta[i].loading = False
-        return len(victims)
+                cqes.append((yield r))
+        cleaned = 0
+        for cqe in cqes:
+            i, _ = self._req_frame.pop(cqe.user_data)
+            m = self.meta[i]
+            if cqe.res != self.cfg.page_size:
+                # failed/short writeback: the frame STAYS dirty (and
+                # keeps its recLSN) so a later pass retries — a
+                # checkpoint must never mark a page clean off a failed
+                # write
+                self.write_retries += 1
+                m.loading = False
+                continue
+            m.dirty = False
+            m.rec_lsn = 0
+            m.loading = False
+            cleaned += 1
+        return cleaned
 
     def evict_some(self) -> Generator:
         """Evict up to one clock-sweep batch of victims (writing dirty
@@ -354,6 +425,7 @@ class BufferPool:
             self.table.pop(self.meta[i].pid, None)
             self.meta[i].loading = True
         dirty = [i for i in victims if self.meta[i].dirty]
+        failed: set = set()
         if dirty:
             for i in dirty:          # block re-faults until disk is current
                 self.evicting_pids.add(self.meta[i].pid)
@@ -368,20 +440,41 @@ class BufferPool:
             self.writebacks += len(dirty)
             reqs = [self._write_req(i) for i in dirty]
             if self.cfg.batch_evict:
-                yield reqs                       # ONE submission, N writes
+                cqes = yield reqs                # ONE submission, N writes
             else:
+                cqes = []
                 for r in reqs:                   # naive: one at a time
-                    yield r
-            for i in dirty:
-                self.meta[i].dirty = False
-                self.meta[i].rec_lsn = 0
-                self.evicting_pids.discard(self.meta[i].pid)
+                    cqes.append((yield r))
+            for cqe in cqes:
+                i, pid = self._req_frame.pop(cqe.user_data)
+                m = self.meta[i]
+                if cqe.res != self.cfg.page_size:
+                    # failed/short writeback: eviction must NOT lose
+                    # data — the frame stays DIRTY and RESIDENT (it is
+                    # re-inserted into the table; evicting_pids held it
+                    # against re-faults, so the slot is free) and will
+                    # be picked again by a later sweep, which retries
+                    # the write
+                    self.write_retries += 1
+                    failed.add(i)
+                    self.table[pid] = i
+                    self.evicting_pids.discard(pid)
+                    m.loading = False
+                    m.ref = True     # full clock revolution before retry
+                    continue
+                m.dirty = False
+                m.rec_lsn = 0
+                self.evicting_pids.discard(pid)
+        freed = 0
         for i in victims:
+            if i in failed:
+                continue
             self.evictions += 1
             self.meta[i].pid = -1
             self.meta[i].loading = False
             self.free.append(i)
-        return len(victims)
+            freed += 1
+        return freed
 
     def _clock_sweep(self) -> List[int]:
         """Second-chance sweep collecting up to evict_batch victims (one
@@ -418,6 +511,7 @@ class BufferPool:
                            cfg.page_size)
             if pthru:
                 sqe.cmd = "passthru"
+            self._req_frame[ud] = (idx, self.meta[idx].pid)
         return IoRequest(prep)
 
     def register_metrics(self, reg, prefix: str) -> None:
@@ -431,6 +525,10 @@ class BufferPool:
         reg.counter(f"{prefix}/writebacks", lambda: self.writebacks)
         reg.counter(f"{prefix}/wal_waits", lambda: self.wal_waits)
         reg.gauge(f"{prefix}/free_frames", lambda: len(self.free))
+        reg.counter(f"{prefix}/read_retries", lambda: self.read_retries)
+        reg.counter(f"{prefix}/write_retries", lambda: self.write_retries)
+        reg.counter(f"{prefix}/passthru_fallbacks",
+                    lambda: self.passthru_fallbacks)
 
 
 # ---------------------------------------------------------------------------
@@ -604,6 +702,18 @@ class PartitionedBufferPool:
     def wal_waits(self) -> int:
         return sum(p.wal_waits for p in self.parts)
 
+    @property
+    def read_retries(self) -> int:
+        return sum(p.read_retries for p in self.parts)
+
+    @property
+    def write_retries(self) -> int:
+        return sum(p.write_retries for p in self.parts)
+
+    @property
+    def passthru_fallbacks(self) -> int:
+        return sum(p.passthru_fallbacks for p in self.parts)
+
     def register_metrics(self, reg, prefix: str) -> None:
         """Partitioned-pool stat surface: the aggregate hit rate /
         counters of the single-core pool plus the latch split."""
@@ -615,3 +725,7 @@ class PartitionedBufferPool:
         reg.gauge(f"{prefix}/free_frames",
                   lambda: sum(len(p.free) for p in self.parts))
         reg.counter(f"{prefix}/latch_cross", lambda: self.latch_cross)
+        reg.counter(f"{prefix}/read_retries", lambda: self.read_retries)
+        reg.counter(f"{prefix}/write_retries", lambda: self.write_retries)
+        reg.counter(f"{prefix}/passthru_fallbacks",
+                    lambda: self.passthru_fallbacks)

@@ -18,7 +18,8 @@ import os
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
-from repro.core.sqe import SQE, Op, SqeFlags, EAGAIN, EINVAL
+from repro.core.sqe import SQE, Op, SqeFlags, EAGAIN, EINVAL, EIO, \
+    ENOTSUP, ETIME
 
 KiB = 1024
 MiB = 1024 * KiB
@@ -91,6 +92,9 @@ class SimNVMe:
         self._next_free = [0.0] * spec.n_ssds
         self._rr = 0
         self.inflight = 0
+        #: optional repro.core.faults.FaultPlane; None = no faults and
+        #: zero per-op overhead (the hot path takes one attr load)
+        self.faults = None
 
     def supports_iopoll(self) -> bool:
         return self.o_direct and not self.filesystem
@@ -108,15 +112,41 @@ class SimNVMe:
     def content_write(self, offset: int, buf, length: int) -> None:
         pass
 
+    # fsync-epoch hooks: SimDisk models the fsyncgate semantics (a
+    # failed fsync DROPS the dirty page cache — the data is gone until
+    # rewritten); timing-only devices need no state.
+    def _fsync_ok(self) -> None:
+        pass
+
+    def _fsync_failed(self) -> None:
+        pass
+
     def service(self, sqe: SQE) -> Tuple[str, float, int]:
         sp = self.spec
+        fp = self.faults
+        now = self.tl.now
         n = max(1, sqe.length)
         write = sqe.op in (Op.WRITEV, Op.WRITE_FIXED)
+        # NVMe passthrough faults: the uring-cmd path can hit an
+        # unsupported command (-ENOTSUP) or hang until the driver's
+        # command timeout (-ETIME); callers degrade to the regular path
+        if fp is not None and (sqe.op == Op.URING_CMD
+                               or sqe.cmd is not None):
+            if fp.roll("passthru_enotsup", now):
+                return ("async", 1e-6, ENOTSUP)
+            if fp.roll("passthru_timeout", now):
+                base = sp.flush_lat if sqe.op == Op.FSYNC \
+                    else (sp.write_lat if write else sp.read_lat)
+                return ("async", base * fp.spec.spike_factor, ETIME)
         if sqe.op == Op.FSYNC:
             lat = sp.flush_lat if (sp.plp and sqe.cmd == "nvme-flush") \
                 else sp.fsync_lat
-            return ("worker" if sqe.cmd != "nvme-flush" else "async",
-                    lat, 0)
+            path = "worker" if sqe.cmd != "nvme-flush" else "async"
+            if fp is not None and fp.roll("fsync_fail", now):
+                self._fsync_failed()
+                return (path, lat, EIO)
+            self._fsync_ok()
+            return (path, lat, 0)
         # worker-fallback cliffs (Fig. 8)
         if n > sp.max_hw_sectors or n > sp.max_segments_bytes:
             path = "worker"
@@ -132,7 +162,18 @@ class SimNVMe:
         t0 = max(self.tl.now, self._next_free[ssd])
         self._next_free[ssd] = t0 + max(svc, xfer)
         done = t0 + base + xfer
-        return (path, done - self.tl.now, n)
+        res = n
+        if fp is not None:
+            # roll order is fixed (eio, then short, then spike) so the
+            # same seed replays the same fault sequence
+            if fp.roll("write_eio" if write else "read_eio", now):
+                res = EIO
+            elif n >= 2 and fp.roll(
+                    "short_write" if write else "short_read", now):
+                res = fp.short_len(n)
+            if fp.roll("latency_spike", now):
+                done = t0 + (base + xfer) * fp.spec.spike_factor
+        return (path, done - self.tl.now, res)
 
 
 class SimDisk(SimNVMe):
@@ -144,6 +185,19 @@ class SimDisk(SimNVMe):
                  spec: NVMeSpec = NVMeSpec(), **kw):
         super().__init__(timeline, spec, **kw)
         self.image = bytearray(capacity)
+        # fsyncgate model (only active with a fault plane attached):
+        # pre-images of every span written since the last *successful*
+        # fsync, applied in reverse on a failed fsync — a failed fsync
+        # means the page cache dropped the dirty data, so a naive
+        # "just fsync again" retry silently loses the writes.  The
+        # correct recovery (wal/log.py) re-WRITES the span first.
+        self._unsynced: list = []
+
+    #: bound on tracked pre-images; overflow drops the oldest (those
+    #: writes "made it to media anyway" — fsync failure never
+    #: *guarantees* loss).  Keeps devices that are never fsynced (the
+    #: data disk under WAL-before-data) from accumulating state.
+    MAX_UNSYNCED = 4096
 
     def content_read(self, offset: int, buf, length: int) -> None:
         if buf is not None:
@@ -151,7 +205,20 @@ class SimDisk(SimNVMe):
 
     def content_write(self, offset: int, buf, length: int) -> None:
         if buf is not None:
+            if self.faults is not None:
+                if len(self._unsynced) >= self.MAX_UNSYNCED:
+                    del self._unsynced[0]
+                self._unsynced.append(
+                    (offset, bytes(self.image[offset:offset + length])))
             self.image[offset:offset + length] = bytes(buf[:length])
+
+    def _fsync_ok(self) -> None:
+        self._unsynced.clear()
+
+    def _fsync_failed(self) -> None:
+        for offset, pre in reversed(self._unsynced):
+            self.image[offset:offset + len(pre)] = pre
+        self._unsynced.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -232,6 +299,13 @@ class SimSocket:
 
     kind = "socket"
 
+    #: rx_queue sentinel for a connection reset: the peer's (multishot)
+    #: recv completes with -ECONNRESET instead of data, exactly like a
+    #: TCP RST surfacing on a real ring.  Delivered IN ORDER relative
+    #: to data, so the receiver knows every byte before the marker
+    #: arrived and every byte after it belongs to the new connection.
+    RESET = -1
+
     def __init__(self, net: SimNetwork, node: int, peer_node: int):
         self.net = net
         self.node = node
@@ -241,6 +315,12 @@ class SimSocket:
         self.rx_data: list = []           # parallel payloads (bytes|None)
         self.rx_waiters: list = []
         self.last_payload: Optional[bytes] = None   # of last try_recv()
+        #: optional repro.core.faults.FaultPlane (sender-side): rolls
+        #: sock_reset per send; a hit breaks the link for
+        #: flap_duration and delivers a RESET marker to the peer
+        self.faults = None
+        self.broken_until = 0.0
+        self.resets = 0
 
     @staticmethod
     def pair(net: SimNetwork, a: int, b: int):
@@ -267,6 +347,37 @@ class SimSocket:
                 w()
         self.net.tl.at(arrive, deliver)
         return tx_done, arrive
+
+    def send_faulted(self, t: float) -> bool:
+        """Consult the fault plane for one send issued at ``t``.
+
+        True means the send fails with -ECONNRESET and delivers
+        nothing (atomic per message — a failed chunk never partially
+        arrives, mirroring TCP's all-or-nothing segment delivery into
+        the stream).  The first failing send of a flap breaks the link
+        until ``broken_until`` and schedules a RESET marker at the
+        peer; every send issued while broken also fails, so a batch
+        of chunks fails as a contiguous suffix — the delivered prefix
+        stays a valid stream prefix."""
+        fp = self.faults
+        if fp is None:
+            return False
+        if t < self.broken_until:
+            fp.injected["sock_reset"] += 1
+            return True
+        if fp.roll("sock_reset", t):
+            self.broken_until = t + fp.spec.flap_duration
+            self.resets += 1
+            peer = self.peer
+
+            def deliver_reset():
+                peer.rx_queue.append(self.RESET)
+                peer.rx_data.append(None)
+                for w in peer.rx_waiters[:]:
+                    w()
+            self.net.tl.at(t + self.net.spec.base_lat, deliver_reset)
+            return True
+        return False
 
     def try_recv(self) -> Optional[int]:
         if self.rx_queue:

@@ -23,9 +23,9 @@ from typing import Dict, List, Optional
 
 from repro.core.backends import FileBackend, SimNVMe, SimSocket
 from repro.core.costs import DEFAULT_COSTS, CostModel
-from repro.core.sqe import (CQE, EAGAIN, ECANCELED, EINVAL, ETIME, SQE,
-                            CqeFlags, Op, RingStats, SetupFlags, SqeFlags,
-                            op_class)
+from repro.core.sqe import (CQE, EAGAIN, ECANCELED, ECONNRESET, EINVAL,
+                            EIO, ENOTSUP, ETIME, SQE, CqeFlags, Op,
+                            RingStats, SetupFlags, SqeFlags, op_class)
 from repro.core.timeline import CoreClock, Timeline
 # passive event sink (repro.observe.trace.CURRENT); imports nothing
 # back from repro.core, and costs nothing when no tracer is installed
@@ -327,7 +327,8 @@ class IoUring:
             return
 
         if isinstance(dev, SimSocket):
-            self._issue_socket(sqe, dev, then, on_sqpoll)
+            self._issue_socket(sqe, dev, then, on_sqpoll, timeout,
+                               timeout_ud)
             return
         if isinstance(dev, FileBackend):
             self._issue_file(sqe, dev, then)
@@ -355,26 +356,34 @@ class IoUring:
             self._charge(c.pin_copy, on_sqpoll, "pin_copy", cls)
             self.stats.bounce_bytes_copied += sqe.length
 
-        buf = self._buf_for(sqe)
-        if write:
-            dev.content_write(sqe.offset, buf, sqe.length)
-        elif sqe.op in (Op.READV, Op.READ_FIXED):
-            dev.content_read(sqe.offset, buf, sqe.length)
-
+        # service FIRST, content second: the device decides the result
+        # (possibly -EIO or a short count under fault injection) and
+        # only the bytes it actually transferred move — a failed write
+        # persists nothing, a short read fills only the prefix
         path, delay, res = dev.service(sqe)
+        if res > 0:
+            buf = self._buf_for(sqe)
+            n = min(res, sqe.length)
+            if write:
+                dev.content_write(sqe.offset, buf, n)
+            elif sqe.op in (Op.READV, Op.READ_FIXED):
+                dev.content_read(sqe.offset, buf, n)
         if sqe.flags & SqeFlags.ASYNC:
             path = "worker"
         if path == "worker":
             self._worker_complete(sqe, delay, res, then)
             return
-        dev.inflight += 1
         done_t = self.tl.now + delay
         if timeout is not None and delay > timeout:
+            # linked timeout fires first: the parent op is cancelled —
+            # without ever counting toward the device's inflight window
+            # (it was pulled from the queue before dispatch)
             self.tl.at(self.tl.now + timeout, lambda: (
                 self._complete(sqe, ECANCELED, CqeFlags.POLLED, None),
                 self._complete(SQE(user_data=timeout_ud), ETIME,
                                CqeFlags.POLLED, then)))
             return
+        dev.inflight += 1
 
         def finish():
             dev.inflight -= 1
@@ -384,11 +393,13 @@ class IoUring:
     # ----------------------------------------------------- network path
 
     def _issue_socket(self, sqe: SQE, sock: SimSocket, then,
-                      on_sqpoll: bool) -> None:
+                      on_sqpoll: bool, timeout=None,
+                      timeout_ud: int = 0) -> None:
         if sqe.op in (Op.SEND, Op.SEND_ZC):
             self._issue_send(sqe, sock, then, on_sqpoll)
         else:
-            self._issue_recv(sqe, sock, then, on_sqpoll)
+            self._issue_recv(sqe, sock, then, on_sqpoll, timeout,
+                             timeout_ud)
 
     def _issue_send(self, sqe: SQE, sock: SimSocket, then,
                     on_sqpoll: bool) -> None:
@@ -405,6 +416,13 @@ class IoUring:
             self.stats.sends_copied += 1
             self.stats.send_bytes_copied += sqe.length
         t_cpu = self._cpu_now()
+        if sock.send_faulted(t_cpu):
+            # connection reset: the message never reaches the wire —
+            # ONE error CQE even for SEND_ZC (no MORE/ZC_NOTIF pair;
+            # the pinned buffer is released immediately on error)
+            self.tl.at(t_cpu, lambda: self._async_complete(
+                sqe, ECONNRESET, then))
+            return
         # data plane: if the SQE carries a buffer, ship its first
         # ``length`` bytes (captured at submission; see SimSocket)
         payload = bytes(sqe.buf[:sqe.length]) if sqe.buf is not None \
@@ -430,7 +448,8 @@ class IoUring:
                        lambda: self._async_complete(sqe, sqe.length, then))
 
     def _issue_recv(self, sqe: SQE, sock: SimSocket, then,
-                    on_sqpoll: bool) -> None:
+                    on_sqpoll: bool, timeout=None,
+                    timeout_ud: int = 0) -> None:
         c = self.costs
         zc = sqe.op == Op.RECV_ZC
         fixed = sqe.buf_index >= 0
@@ -452,6 +471,11 @@ class IoUring:
         got = None if (multishot or sqe.flags & SqeFlags.POLL_FIRST) \
             else sock.try_recv()
         if got is not None:
+            if got < 0:
+                # in-order connection-reset marker: the recv surfaces
+                # -ECONNRESET; no provided buffer is consumed
+                self._complete(sqe, ECONNRESET, CqeFlags.INLINE, then)
+                return
             bid = -1
             if bring is not None:
                 bid = bring.get()
@@ -472,9 +496,23 @@ class IoUring:
             self._complete(sqe, got, CqeFlags.INLINE, then, buf_id=bid)
             return
 
+        # shared with the linked-timeout event: whichever fires first
+        # terminates the recv exactly once (Timeline events can't be
+        # cancelled, so the loser checks the flag and does nothing)
+        state = {"done": False}
+
         def on_ready():
             g = sock.try_recv()
             if g is None:
+                return
+            if g < 0:
+                # connection reset: terminal even for multishot — the
+                # app re-arms after re-establishing stream state
+                sock.rx_waiters.remove(on_ready)
+                self._ms_waiters.pop(sqe.user_data, None)
+                state["done"] = True
+                self._async_complete(sqe, ECONNRESET, then,
+                                     flags=CqeFlags.POLLED)
                 return
             bid = -1
             if bring is not None:
@@ -491,6 +529,7 @@ class IoUring:
                     if tr is not None:
                         self._trace(tr, "buf_ring_exhausted", self.tl.now,
                                     {"ud": sqe.user_data})
+                    state["done"] = True
                     self._async_complete(sqe, EAGAIN, then,
                                          flags=CqeFlags.POLLED)
                     return
@@ -505,10 +544,28 @@ class IoUring:
                 self.stats.multishot_recv_cqes += 1
             else:
                 sock.rx_waiters.remove(on_ready)
+                state["done"] = True
             self._async_complete(sqe, g, then, flags=flags, buf_id=bid)
         sock.rx_waiters.append(on_ready)
         if multishot:
             self._ms_waiters[sqe.user_data] = (sock, on_ready)
+        if timeout is not None and not multishot:
+            def on_timeout():
+                if state["done"]:
+                    return       # the recv won the race — timeout is moot
+                state["done"] = True
+                if on_ready in sock.rx_waiters:
+                    sock.rx_waiters.remove(on_ready)
+                self._ms_waiters.pop(sqe.user_data, None)
+                # mirror the NVMe linked-timeout shape: parent CQE
+                # ECANCELED, then the timeout's own ETIME CQE (which
+                # carries the chain's ``then``); no provided buffer was
+                # ever selected, so none leaks
+                self._async_complete(sqe, ECANCELED, None,
+                                     flags=CqeFlags.POLLED)
+                self._async_complete(SQE(user_data=timeout_ud), ETIME,
+                                     then, flags=CqeFlags.POLLED)
+            self.tl.at(self.tl.now + timeout, on_timeout)
         # drain anything already queued (multishot: one CQE per message)
         while sock.rx_queue and on_ready in sock.rx_waiters:
             before = len(sock.rx_queue)
@@ -561,11 +618,27 @@ class IoUring:
             self._async_complete(sqe, res, then, flags=CqeFlags.WORKER)
         self.tl.at(done, finish)
 
+    def _note_result(self, sqe: SQE, res: int) -> None:
+        """Error/short-I/O bookkeeping for every posted CQE.  Real
+        device/link errors only: pacing TIMEOUT ops completing ETIME,
+        cancels, and EAGAIN (buffer-ring exhaustion, separately
+        counted) are normal control flow, not faults."""
+        st = self.stats
+        if res in (EIO, ECONNRESET, ENOTSUP):
+            st.error_cqes += 1
+        elif res == ETIME and sqe.op not in (Op.NOP, Op.TIMEOUT,
+                                             Op.LINK_TIMEOUT):
+            st.error_cqes += 1     # device-side command timeout
+        elif 0 < res < sqe.length and sqe.op in (
+                Op.READV, Op.READ_FIXED, Op.WRITEV, Op.WRITE_FIXED):
+            st.short_cqes += 1
+
     def _async_complete(self, sqe: SQE, res: int, then,
                         flags: CqeFlags = CqeFlags.POLLED,
                         buf_id: int = -1) -> None:
         c = self.costs
         iopoll = bool(self.setup & SetupFlags.IOPOLL)
+        self._note_result(sqe, res)
         if flags & CqeFlags.ZC_NOTIF:
             self.stats.zc_notifs += 1
             tr = _trace.CURRENT
@@ -618,6 +691,7 @@ class IoUring:
         # t_complete off the submitting CPU's clock (see _kernel_submit):
         # inline completions in multi-core mode otherwise collapse to
         # zero latency because charges never advance the event clock
+        self._note_result(sqe, res)
         cqe = CQE(user_data=sqe.user_data, res=res, flags=flags,
                   buf_id=buf_id,
                   t_submit=getattr(sqe, "_t_submit", self.tl.now),
@@ -671,6 +745,10 @@ class IoUring:
         reg.counter(f"{prefix}/cqes", lambda: st.cqes_reaped)
         reg.counter(f"{prefix}/worker_fallbacks",
                     lambda: st.worker_fallbacks)
+        reg.counter(f"{prefix}/error_cqes", lambda: st.error_cqes)
+        reg.counter(f"{prefix}/short_cqes", lambda: st.short_cqes)
+        reg.counter(f"{prefix}/passthru_fallbacks",
+                    lambda: st.passthru_fallbacks)
         reg.wrate(f"{prefix}/batch_eff", lambda: st.sqes_submitted,
                   lambda: st.enters, unit="sqe/enter")
         reg.gauge(f"{prefix}/cq_backlog",

@@ -85,7 +85,10 @@ ECANCELED = -125
 ETIME = -62
 EINVAL = -22
 EAGAIN = -11
+EIO = -5
 ENOENT = -2
+ENOTSUP = -95
+ECONNRESET = -104
 
 
 @dataclass
@@ -206,6 +209,16 @@ class RingStats:
     send_bytes_copied: int = 0     # bytes those sends copied
     passthru_cmds: int = 0         # ops issued as NVMe io_uring-cmd
                                    # (passthrough reads/writes/flushes)
+    # fault plane / error-recovery surfaces (PR 9).  error_cqes counts
+    # CQEs carrying a real device/link error (EIO, ECONNRESET, ENOTSUP,
+    # or a device-side ETIME — pacing TIMEOUT ops and cancels are not
+    # errors); short_cqes counts partial I/O completions
+    # (0 < res < requested length); passthru_fallbacks counts uring-cmd
+    # ops that a subsystem degraded to the regular read/fsync path
+    # after ENOTSUP or a timeout (bumped by the recovering subsystem).
+    error_cqes: int = 0
+    short_cqes: int = 0
+    passthru_fallbacks: int = 0
     # kernel-cost attribution (seconds; see class docstring)
     attribution: Dict[str, float] = field(default_factory=dict)
     op_attribution: Dict[str, Dict[str, float]] = field(

@@ -64,6 +64,14 @@ class RingReport:
     pager_reads: int = 0
     read_wait_frac: float = 0.0
     prefetch_depth: int = -1
+    # fault-plane / error-recovery signals (PR 9): CQEs that carried a
+    # real device/link error, total CQEs reaped for the rate, and the
+    # semisync availability ledger.  All zero on a healthy ring, so the
+    # robustness rules stay quiet everywhere else.
+    error_cqes: int = 0
+    cqes_reaped: int = 0
+    semisync_degrades: int = 0
+    repromotions: int = 0
 
     def share(self, cat: str) -> float:
         total = sum(self.attribution.values())
@@ -103,6 +111,8 @@ def report_from_stats(stats: Iterable) -> RingReport:
         rep.sends_copied += st.sends_copied
         rep.send_bytes_copied += st.send_bytes_copied
         rep.buf_ring_exhausted += st.buf_ring_exhausted
+        rep.error_cqes += st.error_cqes
+        rep.cqes_reaped += st.cqes_reaped
     return rep
 
 
@@ -122,7 +132,13 @@ def report_from_result(res: dict) -> RingReport:
         buf_ring_exhausted=res.get("buf_ring_exhausted", 0),
         pager_reads=res.get("pager_reads", 0),
         read_wait_frac=res.get("read_wait_frac", 0.0),
-        prefetch_depth=res.get("prefetch_k", -1))
+        prefetch_depth=res.get("prefetch_k", -1),
+        error_cqes=res.get("error_cqes", 0),
+        cqes_reaped=res.get("cqes_reaped",
+                            int(res.get("batch_eff", 0.0) *
+                                res.get("enters", 0))),
+        semisync_degrades=res.get("semisync_degrades", 0),
+        repromotions=res.get("repromotions", 0))
 
 
 def diagnose(rep: RingReport) -> List[Finding]:
@@ -227,6 +243,30 @@ def diagnose(rep: RingReport) -> List[Finding]:
             "§4.2 size the buffer ring to the burst", 0.01,
             f"{rep.buf_ring_exhausted} multishot recvs terminated "
             f"with EAGAIN for lack of a provided buffer"))
+
+    # ---------------------------------------- robustness rules (PR 9)
+    err_rate = rep.error_cqes / max(1, rep.cqes_reaped)
+    if err_rate > 0.005:
+        out.append(Finding(
+            "transient-error-storm", "retry budgets + capped backoff",
+            "errors are a completion, not an exception: every CQE "
+            "res must be checked", 1.0 + err_rate,
+            f"{rep.error_cqes} of {rep.cqes_reaped} CQEs "
+            f"({err_rate:.1%}) completed with a device/link error: "
+            f"the device or link is degraded — retries mask it at a "
+            f"latency cost, so investigate before raising budgets"))
+
+    if rep.semisync_degrades > 0:
+        back = (f"re-promoted {rep.repromotions}x"
+                if rep.repromotions else "still degraded")
+        out.append(Finding(
+            "semisync-degraded", "standby/link capacity (or a longer "
+            "ack timeout)",
+            "availability over replication durability: a stalled "
+            "standby must not stall commits", 0.5 + rep.semisync_degrades,
+            f"semisync fell back to async acking "
+            f"{rep.semisync_degrades}x ({back}): commits acked without "
+            f"a standby-durable copy during the degraded window"))
 
     out.sort(key=lambda f: -f.severity)
     return out

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional
 from repro.core import NVMeSpec
 from repro.core.backends import NICSpec, SimNetwork, SimSocket
 from repro.core.fibers import Gate, IoRequest, StreamClose, StreamRead
-from repro.core.ring import prep_recv
+from repro.core.ring import prep_recv, prep_timeout
 from repro.core.sqe import EAGAIN, CqeFlags, SqeFlags
 from repro.replication.frames import FrameAssembler, FrameKind
 from repro.replication.sender import LogSender
@@ -48,7 +48,8 @@ class ReplicatedCluster:
     def __init__(self, cfg: EngineConfig, *, n_tuples: int = 200_000,
                  spec: Optional[NVMeSpec] = None, seed: int = 0,
                  nic: Optional[NICSpec] = None, chunk_bytes: int = 4096,
-                 rx_buffers: int = 64, zc_ship: str = "auto"):
+                 rx_buffers: int = 64, zc_ship: str = "auto",
+                 ack_timeout: Optional[float] = None):
         assert cfg.repl in MODES, \
             f"EngineConfig.repl must be one of {MODES}, got {cfg.repl!r}"
         assert cfg.durability != "none", "log shipping needs a WAL rung"
@@ -77,11 +78,38 @@ class ReplicatedCluster:
         self.sender = LogSender(
             p, SHIP_FD, chunk_bytes=chunk_bytes, zc_ship=zc_ship,
             zc_threshold=self.nic.zc_send_threshold)
+        # reconnect policy: after a link flap the sender resumes from
+        # the standby's acked durable horizon (everything past it may
+        # have died on the wire); the standby slices the overlap
+        self.sender.resume_from = lambda: self.acked_durable
+        # fault plane: the engine owns ONE plane (EngineConfig.faults);
+        # the link sockets consult the same plane so all fault rolls
+        # stay in one deterministic event-order RNG stream.  Faults
+        # roll on the SENDING end: ship_p is the primary's ship socket,
+        # ack_s the standby's ack socket.
+        fp = getattr(p, "faults", None)
+        if fp is not None:
+            ship_p.faults = fp
+            ack_s.faults = fp
+        self._ship_sock = ship_p
+        self._ack_sock = ack_s
         self.ack_gate = Gate(p.sched)
         self.acked_durable = 0
         self.acked_applied = 0
         self.acks = 0
         self.fin = False
+        # semisync degrade: if the standby's durable ack makes no
+        # progress for ack_timeout seconds while commits wait, drop to
+        # async (stop gating commits) rather than stall the primary;
+        # re-promote once the ack horizon catches back up.  None (the
+        # default) disables the watchdog entirely — existing semisync
+        # runs are bit-identical.
+        self.ack_timeout = ack_timeout
+        self.degraded = False
+        self.degrades = 0
+        self.repromotions = 0
+        self.ack_resets = 0           # resets seen on the ack stream
+        self._last_progress = p.tl.now
         p.repl = self
 
     # ------------------------------------------------- engine-side hooks
@@ -93,10 +121,14 @@ class ReplicatedCluster:
 
     def wait_commit(self, lsn: int):
         """Fiber generator run inside ``StorageEngine.commit`` after
-        local durability: the replication rung's commit gate."""
+        local durability: the replication rung's commit gate.  A
+        DEGRADED semisync cluster acks like async — the txn is locally
+        durable and the standby will catch up from the ship stream."""
         if self.mode == "async":
             return
         while True:
+            if self.degraded and self.mode == "semisync":
+                return
             have = self.acked_applied if self.mode == "sync" \
                 else self.acked_durable
             if have >= lsn:
@@ -119,6 +151,9 @@ class ReplicatedCluster:
                       name="repl-ack-recv")
         p.sched.spawn(self._watcher(stop), core=0, ring=0,
                       name="repl-watcher")
+        if self.mode == "semisync" and self.ack_timeout is not None:
+            p.sched.spawn(self._degrade_watchdog(), core=0, ring=0,
+                          name="repl-degrade-watchdog")
         p.sched.spawn(s.receiver(), core=s.core_idx, ring=s.ring_idx,
                       name="standby-receiver")
         p.sched.spawn(s.flusher(), core=s.core_idx, ring=s.ring_idx,
@@ -133,6 +168,32 @@ class ReplicatedCluster:
         while not stop():
             yield None
         self.sender.gate.open()
+
+    def _degrade_watchdog(self):
+        """Semisync availability policy: tick every ack_timeout/4 (one
+        TIMEOUT SQE per tick, ETIME = timer fired); if the durable-ack
+        horizon has not advanced for ack_timeout while commits are
+        waiting on it, DEGRADE to async acking and wake the waiters.
+        Once the standby catches the primary's durable horizon back up,
+        re-promote to semisync.  Both edges are counted and surfaced to
+        the advisor."""
+        p = self.primary
+        tick = self.ack_timeout / 4
+
+        def prep(sqe, ud, d=tick):
+            prep_timeout(sqe, d)
+        while not self.fin:
+            yield IoRequest(prep)
+            lagging = p.wal.durable_lsn > self.acked_durable
+            if not self.degraded:
+                if lagging and (p.tl.now - self._last_progress
+                                > self.ack_timeout):
+                    self.degraded = True
+                    self.degrades += 1
+                    self.ack_gate.open()       # release parked commits
+            elif not lagging:
+                self.degraded = False
+                self.repromotions += 1
 
     def _ack_receiver(self):
         """Multishot recv over the ack socket (provided buffer ring —
@@ -152,11 +213,19 @@ class ReplicatedCluster:
             if cqe.res == EAGAIN and not (cqe.flags & CqeFlags.MORE):
                 ud = None
                 continue
-            assert cqe.res > 0, f"ack recv failed: {cqe.res}"
+            if cqe.res < 0:
+                # ack-link reset: drop the torn ack (acks are
+                # cumulative, the next one supersedes it) and re-arm
+                self.ack_resets += 1
+                asm.reset()
+                ud = None
+                continue
             data = bytes(bring.buffers[cqe.buf_id][:cqe.res])
             bring.recycle(cqe.buf_id)
             for fr in asm.feed(data):
                 assert fr.kind == FrameKind.ACK
+                if fr.lsn_lo > self.acked_durable:
+                    self._last_progress = self.primary.tl.now
                 self.acked_durable = max(self.acked_durable, fr.lsn_lo)
                 self.acked_applied = max(self.acked_applied, fr.lsn_hi)
                 self.acks += 1
@@ -216,6 +285,16 @@ class ReplicatedCluster:
                     lambda: self.sender.ship_bytes, unit="bytes")
         reg.counter(f"{base}/standby_commits",
                     lambda: len(s.commits))
+        reg.counter(f"{base}/reconnects",
+                    lambda: self.sender.reconnects)
+        reg.counter(f"{base}/send_errors",
+                    lambda: self.sender.send_errors)
+        reg.counter(f"{base}/conn_resets", lambda: s.conn_resets)
+        reg.counter(f"{base}/semisync_degrades", lambda: self.degrades)
+        reg.counter(f"{base}/repromotions",
+                    lambda: self.repromotions)
+        reg.gauge(f"{base}/degraded",
+                  lambda: 1 if self.degraded else 0)
         s.ring.register_metrics(reg, f"{base}/standby_ring")
 
     def result_rows(self) -> Dict:
@@ -237,6 +316,16 @@ class ReplicatedCluster:
                                  if alag_b else 0.0),
             "max_durable_lag_b": max(lag_b) if lag_b else 0,
             "standby_cpu_s": s.ring.stats.cpu_seconds_app,
+            # fault plane / recovery surfaces
+            "repl_reconnects": self.sender.reconnects,
+            "repl_send_errors": self.sender.send_errors,
+            "sock_resets": (self._ship_sock.resets +
+                            self._ack_sock.resets),
+            "standby_conn_resets": s.conn_resets,
+            "dup_spans": s.dup_spans,
+            "overlap_spans": s.overlap_spans,
+            "semisync_degrades": self.degrades,
+            "repromotions": self.repromotions,
         }
 
 

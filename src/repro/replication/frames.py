@@ -122,3 +122,13 @@ class FrameAssembler:
     def torn_bytes(self) -> int:
         """Bytes held back as an incomplete (or corrupt) suffix."""
         return len(self._buf)
+
+    def reset(self) -> None:
+        """Connection reset: drop the partial suffix.  The sender only
+        ever loses a contiguous *suffix* of its sends (the simulated
+        link fails atomically per chunk), so the buffered bytes are a
+        frame head whose tail never arrived — the peer re-sends the
+        whole frame after reconnecting, and the stream resumes on a
+        clean frame boundary.  This is NOT corruption: ``corrupt``
+        stays untouched (a CRC tear still poisons the stream)."""
+        self._buf.clear()

@@ -23,7 +23,7 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.core.fibers import Gate, IoRequest, StreamRead
-from repro.core.ring import prep_send
+from repro.core.ring import prep_send, prep_timeout
 from repro.core.sqe import CqeFlags
 from repro.replication.frames import FrameKind, chop, encode_frame
 from repro.wal.log import encode_header
@@ -31,6 +31,12 @@ from repro.wal.log import encode_header
 
 class LogSender:
     """Ships the primary WAL's durable spans over one SimSocket."""
+
+    #: reconnect backoff after a failed ship (link flap): exponential
+    #: from BASE, capped — sized against SimSocket's flap_duration so a
+    #: couple of retries ride out one flap
+    BACKOFF_BASE = 50e-6
+    BACKOFF_CAP = 5e-3
 
     def __init__(self, engine, ship_fd: int, *, chunk_bytes: int = 4096,
                  zc_ship: str = "auto", zc_threshold: int = 1024,
@@ -50,6 +56,16 @@ class LogSender:
         self.zc_chunks = 0
         self.ship_bytes = 0
         self.enters_before = 0
+        # error recovery: on a connection reset the sender backs off,
+        # then resumes shipping from the standby's last ACKED durable
+        # LSN (resume_from, installed by the cluster) — never beyond
+        # what it was about to send, never below the truncation point.
+        # The standby tolerates the overlap (it slices re-shipped spans
+        # to the suffix past its own end_lsn).
+        self.resume_from: Optional[Callable[[], int]] = None
+        self.send_errors = 0          # chunk CQEs that came back < 0
+        self.reconnects = 0           # backoff+resume cycles
+        self._fails = 0               # consecutive failures (backoff)
         engine.wal.on_flush.append(self._on_flush)
 
     # ------------------------------------------------------------------
@@ -75,15 +91,28 @@ class LogSender:
         wal = self.engine.wal
         # HELLO: the primary's header block makes the standby's log
         # self-describing with the same geometry (base-backup handshake)
-        yield from self._ship_frame(encode_frame(
+        yield from self._ship_retrying(encode_frame(
             FrameKind.HELLO, 0, 0, encode_header(wal.header)))
         while True:
             hi = wal.durable_lsn
             if self.shipped < hi:
-                span = bytes(wal.buf[self.shipped:hi])
-                yield from self._ship_frame(encode_frame(
-                    FrameKind.WAL_SPAN, self.shipped, hi, span))
-                self.shipped = hi
+                lo = self.shipped
+                span = bytes(wal.buf[lo:hi])
+                ok = yield from self._ship_frame(encode_frame(
+                    FrameKind.WAL_SPAN, lo, hi, span))
+                if ok:
+                    self.shipped = hi
+                else:
+                    # link flap: back off, then resume from the
+                    # standby's acked durable horizon (the reset
+                    # dropped its partial frame; everything past the
+                    # ack must be re-shipped)
+                    yield from self._backoff()
+                    self.reconnects += 1
+                    resume = lo if self.resume_from is None \
+                        else self.resume_from()
+                    self.shipped = max(wal.truncated_lsn,
+                                       min(lo, resume))
             elif stop is None or stop():
                 if wal.end_lsn > wal.durable_lsn:
                     # clean shutdown: flush the tail (trailing APPLY /
@@ -93,13 +122,39 @@ class LogSender:
                 break
             else:
                 yield self.gate        # parked until the next flush
-        yield from self._ship_frame(encode_frame(FrameKind.SHUTDOWN))
+        yield from self._ship_retrying(encode_frame(FrameKind.SHUTDOWN))
         while self._notifs:            # release remaining pinned buffers
             yield StreamRead(self._notifs.popleft())
 
+    def _ship_retrying(self, frame: bytes):
+        """Ship a control frame (HELLO/SHUTDOWN), retrying across link
+        flaps until it lands — the stream cannot proceed without it."""
+        while True:
+            ok = yield from self._ship_frame(frame)
+            if ok:
+                return
+            yield from self._backoff()
+            self.reconnects += 1
+
+    def _backoff(self):
+        """Sleep out (part of) a link flap: one TIMEOUT SQE, doubling
+        per consecutive failure up to the cap.  ETIME on the CQE is the
+        timer FIRING, not an error."""
+        delay = min(self.BACKOFF_CAP,
+                    self.BACKOFF_BASE * 2 ** min(self._fails, 8))
+        self._fails += 1
+
+        def prep(sqe, ud, d=delay):
+            prep_timeout(sqe, d)
+        yield IoRequest(prep)
+
     def _ship_frame(self, frame: bytes):
         """Chop one frame into wire chunks and submit them as one batch
-        (one enter); reap ZC notifications beyond the pinned budget."""
+        (one enter); reap ZC notifications beyond the pinned budget.
+        Returns True if every chunk landed; a connection reset fails
+        the contiguous suffix of the batch (the delivered prefix stays
+        a valid stream prefix) and the peer's assembler drops the torn
+        frame head, so the caller re-ships the WHOLE frame."""
         reqs = []
         for chunk in chop(frame, self.chunk_bytes):
             zc = self._use_zc(len(chunk))
@@ -113,9 +168,16 @@ class LogSender:
             reqs.append(IoRequest(prep))
         self.frames += 1
         cqes = yield reqs
+        ok = True
         for c in cqes:
-            assert c.res >= 0, f"ship send failed: {c.res}"
+            if c.res < 0:                      # ECONNRESET: chunk lost
+                ok = False
+                self.send_errors += 1
+                continue
             if c.flags & CqeFlags.MORE:        # SEND_ZC: notif pending
                 self._notifs.append(c.user_data)
         while len(self._notifs) > self.max_pinned:
             yield StreamRead(self._notifs.popleft())
+        if ok:
+            self._fails = 0
+        return ok

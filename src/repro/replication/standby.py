@@ -36,7 +36,7 @@ from repro.bufferpool import BufferPool, PoolConfig
 from repro.core import CoreClock, IoUring, SetupFlags
 from repro.core.backends import SimDisk, SimSocket
 from repro.core.fibers import Gate, IoRequest, StreamClose, StreamRead
-from repro.core.ring import prep_recv, prep_send
+from repro.core.ring import prep_recv, prep_send, prep_timeout
 from repro.core.sqe import EAGAIN, CqeFlags, SqeFlags
 from repro.replication.frames import (FrameAssembler, FrameKind,
                                       encode_frame)
@@ -124,6 +124,15 @@ class StandbyNode:
         self.pages_redone = 0
         self.pages_skipped = 0
         self.acks_sent = 0
+        # error recovery (fault plane): connection resets seen on the
+        # ship stream (assembler reset + multishot re-arm), re-shipped
+        # spans that fully overlapped our log (dropped), spans sliced
+        # to the fresh suffix, and ack sends lost to a flap (retried
+        # until one lands — see _send_ack)
+        self.conn_resets = 0
+        self.dup_spans = 0
+        self.overlap_spans = 0
+        self.ack_send_errors = 0
         self.lag_samples: List[tuple] = []  # (t, durable_lag, apply_lag)
 
     # ------------------------------------------------------------ fibers
@@ -149,7 +158,16 @@ class StandbyNode:
                 # buffer was recycled as we drained, so re-arm directly
                 ud = None
                 continue
-            assert cqe.res > 0, f"ship recv failed: {cqe.res}"
+            if cqe.res < 0:
+                # connection reset: the torn frame head in the
+                # assembler will never get its tail — drop it (the
+                # primary re-ships the whole frame from our acked
+                # horizon) and re-arm the multishot recv.  No provided
+                # buffer was consumed by the error CQE.
+                self.conn_resets += 1
+                asm.reset()
+                ud = None
+                continue
             data = bytes(bring.buffers[cqe.buf_id][:cqe.res])
             bring.recycle(cqe.buf_id)
             self.chunks_in += 1
@@ -169,9 +187,23 @@ class StandbyNode:
             self.tree.root = self.wal.header.root
             self.tree.next_pid = self.wal.header.next_pid
         elif fr.kind == FrameKind.WAL_SPAN:
-            self.wal.append_raw(fr.payload, fr.lsn_lo)
-            self.spans_in += 1
-            self.wal_gate.open()
+            # overlap-tolerant: after a reconnect the primary resumes
+            # from our last ACKED durable LSN, which may trail what we
+            # already hold — slice the span to the suffix past our own
+            # end.  A pure-overlap re-ship is dropped; a gap would mean
+            # the stream lost bytes we never acked (impossible with
+            # in-order delivery + whole-frame re-ship) and is an error.
+            end = self.wal.end_lsn
+            if fr.lsn_hi <= end:
+                self.dup_spans += 1
+            else:
+                assert fr.lsn_lo <= end, \
+                    f"ship stream gap: have {end}, got [{fr.lsn_lo}..)"
+                if fr.lsn_lo < end:
+                    self.overlap_spans += 1
+                self.wal.append_raw(fr.payload[end - fr.lsn_lo:], end)
+                self.spans_in += 1
+                self.wal_gate.open()
         elif fr.kind == FrameKind.SHUTDOWN:
             self.shutdown = True
         else:
@@ -212,15 +244,31 @@ class StandbyNode:
     # --------------------------------------------------------- internals
 
     def _send_ack(self, fin: bool = False):
-        frame = encode_frame(FrameKind.ACK, self.wal.durable_lsn,
-                             self.applied_lsn,
-                             b"\x01" if fin else b"")
+        """Ack the (durable, applied) horizons, retrying across link
+        flaps.  Acks are cumulative and idempotent (absolute horizons,
+        receiver takes the max), so a retry can only over-cover — but a
+        DROPPED ack is not always harmless: when it is the last of a
+        burst the primary has nothing left to ship, no bigger ack ever
+        follows, and semisync/sync commits would park forever.  The
+        frame is re-encoded each attempt so the eventual send carries
+        the freshest horizons."""
+        while True:
+            frame = encode_frame(FrameKind.ACK, self.wal.durable_lsn,
+                                 self.applied_lsn,
+                                 b"\x01" if fin else b"")
 
-        def prep(sqe, ud):
-            prep_send(sqe, self.ack_fd, len(frame), buf=memoryview(frame))
-        cqe = yield IoRequest(prep)
-        assert cqe.res >= 0, f"ack send failed: {cqe.res}"
-        self.acks_sent += 1
+            def prep(sqe, ud):
+                prep_send(sqe, self.ack_fd, len(frame),
+                          buf=memoryview(frame))
+            cqe = yield IoRequest(prep)
+            if cqe.res >= 0:
+                self.acks_sent += 1
+                return
+            self.ack_send_errors += 1
+
+            def prep_t(sqe, ud):
+                prep_timeout(sqe, 200e-6)      # sleep out the flap
+            yield IoRequest(prep_t)
 
     def _sample_lag(self) -> None:
         p = self.primary.wal

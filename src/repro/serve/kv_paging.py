@@ -76,6 +76,12 @@ class PagerConfig:
     #: modeled attention compute per (page, token) visit — what the
     #: prefetch fibers overlap I/O against
     decode_compute_s: float = 2e-7
+    #: fault-injection plane (repro.core.faults.FaultSpec); None or an
+    #: all-zero spec leaves the tiers untouched.  The pool's recovery
+    #: policy covers the pager wholesale: reads retry (passthru cold
+    #: reads degrade to regular reads on ENOTSUP/timeout), failed spill
+    #: writebacks keep the frame dirty and resident.
+    faults: object = None
 
     @property
     def page_bytes(self) -> int:
@@ -127,6 +133,11 @@ class KVPager:
                             spec=host_dram_spec())
         self.cold = SimDisk(self.tl, cfg.nvme_pages * self.page_bytes,
                             spec=kv_nvme_spec())
+        from repro.core.faults import maybe_plane
+        self.fault_plane = maybe_plane(cfg.faults)
+        if self.fault_plane is not None:
+            self.host.faults = self.fault_plane
+            self.cold.faults = self.fault_plane
         self.ring.register_device(KV_HOST_FD, self.host)
         self.ring.register_device(KV_NVME_FD, self.cold)
         self.sched = FiberScheduler(
@@ -417,7 +428,7 @@ class KVPager:
     def result(self, dt: float) -> dict:
         rs = self.ring.stats
         n_seqs = max(1, len(self.seqs))
-        return {
+        out = {
             "config": self.cfg.name,
             "tokens": self.tokens_done,
             "sim_seconds": dt,
@@ -447,6 +458,16 @@ class KVPager:
             "sqpoll_cpu_s": rs.cpu_seconds_sqpoll,
             "attribution": dict(rs.attribution),
         }
+        if self.fault_plane is not None:
+            out.update({
+                "faults_injected": self.fault_plane.total_injected,
+                "read_retries": self.pool.read_retries,
+                "write_retries": self.pool.write_retries,
+                "passthru_fallbacks": self.pool.passthru_fallbacks,
+                "error_cqes": rs.error_cqes,
+                "short_cqes": rs.short_cqes,
+            })
+        return out
 
     # ------------------------------------------------- stats & metrics
 
@@ -466,6 +487,7 @@ class KVPager:
         self.ring.stats.__dict__.update(RingStats().__dict__)
         p = self.pool
         p.hits = p.faults = p.evictions = p.writebacks = p.wal_waits = 0
+        p.read_retries = p.write_retries = p.passthru_fallbacks = 0
         self._reset_counters()
 
     def register_metrics(self, reg, prefix: str = "pager") -> None:

@@ -36,6 +36,7 @@ from typing import Dict, List
 
 from repro.core.backends import SimNetwork, SimSocket
 from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.faults import maybe_plane
 from repro.core.fibers import (FiberScheduler, IoRequest, StreamClose,
                                StreamRead)
 from repro.core.ring import IoUring, prep_recv, prep_send, prep_timeout
@@ -50,13 +51,17 @@ class ShuffleEngine:
     """One shuffle execution over the ring runtime."""
 
     def __init__(self, cfg: ShuffleConfig,
-                 costs: CostModel = DEFAULT_COSTS):
+                 costs: CostModel = DEFAULT_COSTS, faults=None):
         self.cfg = cfg
         self.costs = costs
         self.tl = Timeline()
         n = cfg.n_nodes
         self.net = SimNetwork(self.tl, n, cfg.nic_spec(),
                               tuned=cfg.tuned_network)
+        # fault plane (repro.core.faults): link flaps roll on the
+        # SENDING socket, so the plane attaches to every mesh endpoint;
+        # None/all-zero leaves the mesh untouched
+        self.faults = maybe_plane(faults)
         # full-duplex socket mesh: socks[a][b] is a's endpoint toward b
         self.socks: List[List[SimSocket]] = \
             [[None] * n for _ in range(n)]
@@ -64,6 +69,9 @@ class ShuffleEngine:
             for b in range(a + 1, n):
                 sa, sb = SimSocket.pair(self.net, a, b)
                 self.socks[a][b], self.socks[b][a] = sa, sb
+                if self.faults is not None:
+                    sa.faults = self.faults
+                    sb.faults = self.faults
 
         epoll = cfg.iface == "epoll"
         setup = SetupFlags.NONE if epoll else \
@@ -91,6 +99,12 @@ class ShuffleEngine:
         self.sent = [0] * n
         self.received = [0] * n
         self.expected = expected_flow_bytes(cfg)
+        # error-recovery surfaces: chunks lost to a link flap (and
+        # un-counted from ``sent``), re-send rounds, resets seen by
+        # receivers
+        self.send_errors = 0
+        self.resends = 0
+        self.conn_resets = 0
 
     # ---------------------------------------------------------- helpers
 
@@ -133,21 +147,37 @@ class ShuffleEngine:
                 batch.append((ev[1], ev[2]))
                 continue
             if batch:                     # flush staged chunks: ONE enter
-                reqs = []
-                for dst, nb in batch:
-                    membytes = nb if zc else 3 * nb   # DMA (+bounce r/w)
-                    self._charge(src, core, 0.0, mem_bytes=membytes)
-                    self.sent[src] += nb
-
-                    def prep(sqe, ud, dst=dst, nb=nb):
-                        prep_send(sqe, dst, nb, zero_copy=zc)
-                    reqs.append(IoRequest(prep))
+                outstanding = batch
                 batch = []
-                cqes = yield reqs
-                for c in cqes:
-                    assert c.res >= 0, f"send failed: {c.res}"
-                    if c.flags & CqeFlags.MORE:       # zc: notif pending
-                        pending_notifs.append(c.user_data)
+                while outstanding:
+                    reqs = []
+                    chunk_of: Dict[int, tuple] = {}   # ud -> (dst, nb)
+                    for dst, nb in outstanding:
+                        membytes = nb if zc else 3 * nb  # DMA (+bounce)
+                        self._charge(src, core, 0.0, mem_bytes=membytes)
+                        self.sent[src] += nb
+
+                        def prep(sqe, ud, dst=dst, nb=nb):
+                            prep_send(sqe, dst, nb, zero_copy=zc)
+                            chunk_of[ud] = (dst, nb)
+                        reqs.append(IoRequest(prep))
+                    cqes = yield reqs
+                    outstanding = []
+                    for c in cqes:
+                        dst, nb = chunk_of[c.user_data]
+                        if c.res < 0:     # link flap: chunk went nowhere
+                            self.send_errors += 1
+                            self.sent[src] -= nb       # not delivered
+                            outstanding.append((dst, nb))
+                            continue
+                        if c.flags & CqeFlags.MORE:   # zc: notif pending
+                            pending_notifs.append(c.user_data)
+                    if outstanding:       # wait out the flap, re-send
+                        self.resends += 1
+                        dt = (self.faults.spec.flap_duration
+                              if self.faults is not None else 200e-6)
+                        yield IoRequest(lambda sqe, _ud, dt=dt:
+                                        prep_timeout(sqe, dt))
                 while len(pending_notifs) > max_pinned:
                     yield StreamRead(pending_notifs.popleft())
             if ev[0] == "morsel":
@@ -177,6 +207,9 @@ class ShuffleEngine:
                 def prep(sqe, ud):
                     prep_recv(sqe, src, 0)
                 cqe = yield IoRequest(prep)
+                if cqe.res < 0:           # link flap: re-issue the recv
+                    self.conn_resets += 1
+                    continue
                 assert cqe.res > 0, f"recv failed: {cqe.res}"
                 got += cqe.res
                 self._consume(dst, core, cqe.res)
@@ -201,6 +234,10 @@ class ShuffleEngine:
                 dt = max(core.free - self.tl.now, 1e-9)
                 yield IoRequest(lambda sqe, _ud, dt=dt:
                                 prep_timeout(sqe, dt))
+                ud = None
+                continue
+            if cqe.res < 0:               # reset: re-arm the multishot
+                self.conn_resets += 1     # (no provided buffer consumed)
                 ud = None
                 continue
             assert cqe.res > 0, f"recv failed: {cqe.res}"
@@ -294,7 +331,7 @@ class ShuffleEngine:
         sqes = sum(r.stats.sqes_submitted for r in self.rings)
         ring_cpu = sum(r.stats.cpu_seconds_app for r in self.rings)
         egress = [s / dur for s in self.sent]
-        return {
+        out = {
             "duration_s": dur,
             "egress_gib_per_node": sum(egress) / n / 2**30,
             "egress_gbit_per_node": sum(egress) / n * 8 / 1e9,
@@ -324,6 +361,14 @@ class ShuffleEngine:
                                      for r in self.rings),
             "attribution": self._merged_attribution(),
         }
+        if self.faults is not None:
+            out.update({
+                "faults_injected": self.faults.total_injected,
+                "send_errors": self.send_errors,
+                "resends": self.resends,
+                "conn_resets": self.conn_resets,
+            })
+        return out
 
     def _merged_attribution(self) -> Dict[str, float]:
         attr: Dict[str, float] = {}

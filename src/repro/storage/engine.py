@@ -67,6 +67,7 @@ from repro.core import (AdaptiveBatcher, AdaptiveFlush, CoreClock,
                         EagerSubmit, FiberScheduler, IoUring, NVMeSpec,
                         SetupFlags, Timeline)
 from repro.core.backends import DATA_FD, LOG_FD, SimDisk
+from repro.core.faults import FaultSpec, maybe_plane
 from repro.observe import metrics as _metrics
 from repro.storage.btree import BTree, bulk_load
 from repro.wal.group_commit import GroupCommit, MultiCoreGroupCommit
@@ -121,6 +122,13 @@ class EngineConfig:
     # bit-for-bit the single-node engine; ``ReplicatedCluster`` reads the
     # mode, builds the standby, and installs the commit-gating hook.
     repl: str = "off"
+    # fault-injection plane (repro.core.faults): None or an all-zero
+    # spec is STRUCTURALLY identical to no plane — the backends never
+    # see it and consume no randomness, so every existing rung stays
+    # bit-for-bit unchanged.  With nonzero rates, ONE shared plane (one
+    # seeded RNG, consumed in sim event order) is attached to the data
+    # and log devices (and, by ReplicatedCluster, to the link sockets).
+    faults: Optional[FaultSpec] = None
 
     @staticmethod
     def ladder():
@@ -293,6 +301,11 @@ class StorageEngine:
                        spec=spec,
                        filesystem=not cfg.passthrough)
         self.disk = disk
+        # fault plane: one plane, one RNG, every backend (see
+        # EngineConfig.faults) — None when the spec is absent/all-zero
+        self.faults = maybe_plane(cfg.faults)
+        if self.faults is not None:
+            disk.faults = self.faults
         for r in self.rings:
             r.register_device(DATA_FD, disk)
         root, next_pid = bulk_load(disk.image, keys, vals,
@@ -352,6 +365,8 @@ class StorageEngine:
             self.log_disk = SimDisk(
                 self.tl, cfg.log_capacity, spec=spec,
                 filesystem=(mode != "passthru"))
+            if self.faults is not None:
+                self.log_disk.faults = self.faults
             for r in self.rings:
                 r.register_device(LOG_FD, self.log_disk)
             # NB: the partitioned pool rounds the frame count down to a
@@ -567,6 +582,8 @@ class StorageEngine:
             self.gc.register_metrics(reg, f"{base}/gc")
         reg.gauge(f"{base}/iodepth", lambda: self.sched.inflight)
         reg.gauge(f"{base}/ready_fibers", self.sched.ready_count)
+        if self.faults is not None:
+            self.faults.register_metrics(reg, f"{base}/faults")
         if txns is not None:
             reg.counter(f"{base}/txns", txns)
             reg.wrate(f"{base}/tps", txns, None, unit="txn/s")
@@ -665,6 +682,27 @@ class StorageEngine:
                 "log_live_mb": (self.wal.end_lsn -
                                 self.wal.truncated_lsn) / 1e6,
             })
+        if self.faults is not None:
+            # fault-plane surfaces: injections by class tallied at the
+            # plane, recoveries tallied where the policy lives
+            out.update({
+                "faults_injected": self.faults.total_injected,
+                "error_cqes": sum(r.stats.error_cqes
+                                  for r in self._own_rings),
+                "short_cqes": sum(r.stats.short_cqes
+                                  for r in self._own_rings),
+                "passthru_fallbacks": sum(r.stats.passthru_fallbacks
+                                          for r in self._own_rings),
+                "pool_read_retries": self.pool.read_retries,
+                "pool_write_retries": self.pool.write_retries,
+            })
+            if self.wal is not None:
+                out.update({
+                    "wal_io_retries": self.wal.stats.io_retries,
+                    "wal_flush_errors": self.wal.stats.flush_errors,
+                    "wal_passthru_degrades":
+                        self.wal.stats.passthru_degrades,
+                })
         if self.repl is not None:
             # with a standby attached, the run only quiesces once the
             # SHUTDOWN/fin handshake drains — report client-visible

@@ -92,6 +92,13 @@ class GroupCommit:
             self._release()
 
     def _release(self) -> None:
+        # fsyncgate audit: release is gated on ``durable_lsn``, which
+        # ``WriteAheadLog._flush_once`` advances ONLY after an attempt
+        # whose every write AND fsync succeeded (a failed fsync retries
+        # with a full span re-write, or fail-stops).  A commit can
+        # therefore never be acked off a failed barrier — the leader
+        # finishing ``flush_to`` is not the release condition, the
+        # durable horizon is.
         w = self.wal
         done = [l for l in self._waiting if l <= w.durable_lsn]
         if done:

@@ -31,8 +31,16 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.fibers import IoRequest
-from repro.core.ring import (prep_fsync, prep_write, prep_write_fixed)
-from repro.core.sqe import CqeFlags, SqeFlags
+from repro.core.ring import (prep_fsync, prep_timeout, prep_write,
+                             prep_write_fixed)
+from repro.core.sqe import CqeFlags, ENOTSUP, ETIME, SqeFlags
+
+
+class WalFailStop(RuntimeError):
+    """Persistent log-device failure: the retry budget is exhausted and
+    the WAL refuses to ack any further commits.  The engine must treat
+    this as a crash and go through recovery — continuing would ack
+    commits whose durability is unknown (the fsyncgate failure mode)."""
 
 BLOCK = 4096
 _REC_HDR = struct.Struct("<IIBQ")            # crc, size, type, txn
@@ -93,6 +101,12 @@ class WalStats:
     fsync_inline: int = 0
     truncations: int = 0              # checkpoint-driven log truncations
     bytes_reclaimed: int = 0          # log space zeroed by truncation
+    io_retries: int = 0               # flush attempts redone after an
+                                      # error/short CQE (capped backoff)
+    flush_errors: int = 0             # error/short CQEs seen by flushes
+    passthru_degrades: int = 0        # passthru -> linked fallbacks
+                                      # (ENOTSUP / cmd timeout)
+    failstops: int = 0                # retry budget exhausted
     groups: List[int] = field(default_factory=list)
 
     def mean_group(self) -> float:
@@ -292,6 +306,10 @@ class WriteAheadLog:
         self.truncated_lsn = BLOCK
         self._flushing = False
         self.stats = WalStats()
+        # expected byte count per in-flight write ud — CQEs come back
+        # in arrival order, so short writes are detected by matching
+        # user_data against the length recorded at prep time
+        self._req_len: Dict[int, int] = {}
         # flush hooks: called as cb(prev_durable, new_durable) after
         # every flush that advances the durable horizon — the log-
         # shipping sender taps these spans (repro.replication)
@@ -363,39 +381,87 @@ class WriteAheadLog:
         finally:
             self._flushing = False
 
+    #: transient-error recovery policy: full span re-write + re-fsync
+    #: per attempt, exponential backoff capped at BACKOFF_CAP, then
+    #: fail-stop (WalFailStop).  The span re-WRITE before the re-fsync
+    #: is what makes the retry fsyncgate-correct — a failed fsync means
+    #: the page cache may have DROPPED the dirty span, so retrying just
+    #: the fsync would durably persist nothing (see SimDisk).
+    MAX_RETRIES = 8
+    BACKOFF_BASE = 100e-6
+    BACKOFF_CAP = 10e-3
+
+    def _sleep_req(self, seconds: float) -> IoRequest:
+        def prep(sqe, ud):
+            prep_timeout(sqe, seconds)
+        return IoRequest(prep)
+
     def _flush_once(self, mode: str):
         """Write the aligned span [durable_lsn, end_lsn) + barrier.
         Flushes EVERYTHING appended so far — records that piled up while
         a previous flush was in flight ride along for free (this is what
-        group commit amortizes)."""
+        group commit amortizes).
+
+        ``durable_lsn`` advances ONLY when every write and the fsync of
+        one attempt succeeded in full, so group commit can never ack a
+        commit whose barrier failed."""
         self.stats.flushes += 1
         target = self.end_lsn
-        lo = (self.durable_lsn // BLOCK) * BLOCK
-        hi = ((target + BLOCK - 1) // BLOCK) * BLOCK
-        span = bytes(self.buf[lo:hi])
-        span += bytes(hi - lo - len(span))          # zero-pad the tail
-        reqs = self._write_reqs(lo, span, mode)
-        if mode == "fsync":
-            # NB: yielding an empty list would strand the fiber (the
-            # scheduler has nothing to wake it with); span can be empty
-            # in flush_solo when everything is already durable, but the
-            # naive engine still pays its fsync
-            cqes = list((yield reqs)) if reqs else []  # submission 1
-            fsync_cqe = yield self._fsync_req(mode)    # submission 2
-            cqes = cqes + [fsync_cqe]
+        for attempt in range(self.MAX_RETRIES + 1):
+            if mode == "passthru" and self.mode != "passthru":
+                mode = self.mode           # degraded under this flush
+            lo = (self.durable_lsn // BLOCK) * BLOCK
+            hi = ((target + BLOCK - 1) // BLOCK) * BLOCK
+            span = bytes(self.buf[lo:hi])
+            span += bytes(hi - lo - len(span))      # zero-pad the tail
+            self._req_len.clear()
+            reqs = self._write_reqs(lo, span, mode)
+            if mode == "fsync":
+                # NB: yielding an empty list would strand the fiber (the
+                # scheduler has nothing to wake it with); span can be
+                # empty in flush_solo when everything is already durable,
+                # but the naive engine still pays its fsync
+                cqes = list((yield reqs)) if reqs else []  # submission 1
+                fsync_cqe = yield self._fsync_req(mode)    # submission 2
+                cqes = cqes + [fsync_cqe]
+            else:
+                # one linked chain: writes IO_LINK'd, fsync terminates
+                reqs.append(self._fsync_req(mode))
+                cqes = yield reqs
+            bad = [c for c in cqes
+                   if c.res < 0 or c.res < self._req_len.get(
+                       c.user_data, 0)]
+            if not bad:
+                f = cqes[-1].flags      # the fsync completes last
+                if f & CqeFlags.WORKER:
+                    self.stats.fsync_worker += 1
+                elif f & CqeFlags.INLINE:
+                    self.stats.fsync_inline += 1
+                else:
+                    self.stats.fsync_polled += 1
+                break
+            self.stats.flush_errors += len(bad)
+            if mode == "passthru" and any(
+                    c.res in (ENOTSUP, ETIME) for c in bad):
+                # the device rejected / timed out the uring-cmd path:
+                # degrade this WAL to the linked write->fsync path for
+                # good (counted; advisor-visible via the ring stats)
+                self.stats.passthru_degrades += 1
+                self.ring.stats.passthru_fallbacks += 1
+                self.mode = mode = "linked"
+                continue               # retry immediately on the new path
+            if attempt >= self.MAX_RETRIES:
+                self.stats.failstops += 1
+                raise WalFailStop(
+                    f"log I/O failed after {attempt + 1} attempts: "
+                    f"res={[c.res for c in bad]}")
+            self.stats.io_retries += 1
+            yield self._sleep_req(
+                min(self.BACKOFF_CAP, self.BACKOFF_BASE * (2 ** attempt)))
         else:
-            # one linked chain: every write IO_LINK'd, fsync terminates
-            reqs.append(self._fsync_req(mode))
-            cqes = yield reqs
-        for c in cqes:
-            assert c.res >= 0, f"log I/O failed: {c.res}"
-        f = cqes[-1].flags              # the fsync completes last
-        if f & CqeFlags.WORKER:
-            self.stats.fsync_worker += 1
-        elif f & CqeFlags.INLINE:
-            self.stats.fsync_inline += 1
-        else:
-            self.stats.fsync_polled += 1
+            self.stats.failstops += 1
+            raise WalFailStop(f"log I/O failed after "
+                              f"{self.MAX_RETRIES + 1} attempts")
         self.flushed_lsn = max(self.flushed_lsn, target)
         prev = self.durable_lsn
         self.durable_lsn = max(self.durable_lsn, target)
@@ -438,6 +504,7 @@ class WriteAheadLog:
                                  offset, n, flags=link)
                 if mode == "passthru":
                     sqe.cmd = "passthru"
+                self._req_len[ud] = n
             return IoRequest(prep)
         self.stats.unstaged_writes += 1
 
@@ -446,6 +513,7 @@ class WriteAheadLog:
                        flags=link)
             if mode == "passthru":
                 sqe.cmd = "passthru"
+            self._req_len[ud] = len(chunk)
         return IoRequest(prep)
 
     def _fsync_req(self, mode: str) -> IoRequest:

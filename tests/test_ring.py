@@ -6,7 +6,7 @@ import pytest
 from repro.core import (IoUring, NICSpec, SetupFlags, SimNVMe, SimNetwork,
                         SimSocket, Timeline, CqeFlags, NVMeSpec, SqeFlags)
 from repro.core import ring as R
-from repro.core.sqe import EAGAIN
+from repro.core.sqe import EAGAIN, ECANCELED, ETIME
 
 
 def make_ring(setup=SetupFlags.DEFER_TASKRUN | SetupFlags.SINGLE_ISSUER,
@@ -250,6 +250,76 @@ def test_multishot_cancel_disarms_waiter():
     rb.submit()
     rb.wait_cqe()
     tl.run_until(tl.now + 1e-3)
+    assert ra.peek_cqe() is None
+
+
+def test_link_timeout_posts_exactly_two_cqes_no_double_completion():
+    """The canceled parent posts ECANCELED and the timeout posts ETIME —
+    exactly one CQE each.  Running the timeline past the device latency
+    must NOT surface a third CQE (the device op was never dispatched, so
+    there is no late completion to double-post)."""
+    slow = NVMeSpec(read_lat=5e-3)
+    tl, ring, _ = make_ring(spec=slow)
+    sqe = ring.get_sqe()
+    R.prep_read(sqe, 3, bytearray(4096), 0, 4096, user_data=1,
+                flags=SqeFlags.IO_LINK)
+    t = ring.get_sqe()
+    R.prep_link_timeout(t, 1e-3, user_data=2)
+    ring.submit()
+    cqes = ring.wait_cqes(2)
+    results = {c.user_data: c.res for c in cqes}
+    assert results[1] == ECANCELED
+    assert results[2] == ETIME
+    # run well past the 5 ms the read would have taken
+    tl.run_until(tl.now + 20e-3)
+    assert ring.peek_cqe() is None            # no late third CQE
+
+
+def test_recv_link_timeout_keeps_provided_buffers_and_rearms():
+    """A recv bounded by a linked timeout fires ECANCELED/ETIME without
+    consuming a provided buffer; the buffer ring stays full and a
+    re-armed recv picks up a later message normally."""
+    tl, ra, rb = make_socket_rings()
+    br = ra.register_buf_ring(bgid=2, n_bufs=4, buf_size=512)
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=1, flags=SqeFlags.IO_LINK, buf_group=2)
+    t = ra.get_sqe()
+    R.prep_link_timeout(t, 200e-6, user_data=2)
+    ra.submit()
+    cqes = ra.wait_cqes(2)
+    results = {c.user_data: c.res for c in cqes}
+    assert results[1] == ECANCELED
+    assert results[2] == ETIME
+    assert br.available() == 4                # nothing leaked
+    # re-arm: the path is not poisoned by the earlier cancellation
+    sqe = rb.get_sqe()
+    R.prep_send(sqe, 4, 512)
+    rb.submit()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=3, buf_group=2)
+    ra.submit()
+    cqe = ra.wait_cqe()
+    assert cqe.user_data == 3 and cqe.res == 512
+    assert br.available() == 3
+
+
+def test_recv_wins_race_timeout_posts_nothing_extra():
+    """When the message lands before the linked timeout expires, the
+    recv completes normally and the timeout is moot: exactly one CQE,
+    never a stale ETIME afterwards."""
+    tl, ra, rb = make_socket_rings()
+    sqe = rb.get_sqe()
+    R.prep_send(sqe, 4, 256)
+    rb.submit()
+    sqe = ra.get_sqe()
+    R.prep_recv(sqe, 4, user_data=1, flags=SqeFlags.IO_LINK)
+    t = ra.get_sqe()
+    R.prep_link_timeout(t, 5e-3, user_data=2)
+    ra.submit()
+    cqe = ra.wait_cqe()
+    assert cqe.user_data == 1 and cqe.res == 256
+    # run past the timeout deadline: no ETIME, no second completion
+    tl.run_until(tl.now + 10e-3)
     assert ra.peek_cqe() is None
 
 

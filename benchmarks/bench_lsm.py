@@ -1,0 +1,143 @@
+"""LSM engine benches (lsm/*): B-tree-vs-LSM on one YCSB stream, the
+amplification triple, and the background-compaction interference study
+with the ``+KernelCompaction`` offload rung.
+
+Three sections:
+
+  lsm/ycsb          Both engines run the SAME seeded zipfian YCSB
+                    stream (mixes A/C/F) single-fibered, so commit
+                    order is identical and the final logical state
+                    must match bit for bit — ``equal_state`` is the
+                    committed proof (check.sh asserts it is 1).  Per
+                    engine: tps; for the LSM side also write/read/
+                    space amplification.
+
+  lsm/interference  Open-loop Poisson updates (repro.observe.slo)
+                    swept over offered write rates, host-merge vs
+                    ``+KernelCompaction``.  Foreground p99/p999 vs the
+                    compaction-debt the background fibers are working
+                    off — the curve the paper's background-work
+                    warning predicts: p99 degrades with debt, and the
+                    offload rung recovers a measured fraction of the
+                    gap (``p99_recovered_frac``) at the same rate.
+
+  lsm/kernel        Kernel-cost attribution of a ``+KernelCompaction``
+                    run: the ``kernel_compaction`` category appears,
+                    and the books still balance (conserved=yes).
+"""
+
+from benchmarks.common import emit, emit_attribution, section
+from repro.core import NVMeSpec
+from repro.observe import slo
+from repro.storage.engine import EngineConfig, make_engine
+from repro.storage.workloads import YCSB, ycsb_update_txn
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+
+#: offered update rates (txn/s): comfortable, busy, past the LSM
+#: engine's closed-loop capacity.  Same rates in smoke mode (shorter
+#: window) so row names line up across smoke and full snapshots.
+RATES = (50_000, 150_000, 250_000)
+MIXES = ("A", "C", "F")
+
+
+def _lsm(n_tuples, *, kernel=False, n_fibers=64):
+    cfg = EngineConfig.lsm(kernel_compaction=kernel,
+                           n_fibers=n_fibers, pool_frames=256)
+    return make_engine(cfg, n_tuples=n_tuples,
+                       spec=NVMeSpec(**ENTERPRISE))
+
+
+def _btree(n_tuples, *, n_fibers=64):
+    # the B-tree twin on the same ladder rung (+PassthruFlush, fixed
+    # bufs, adaptive batching) so the comparison is engine vs engine,
+    # not rung vs rung
+    cfg = EngineConfig("+PassthruFlush", n_fibers=n_fibers,
+                       pool_frames=256, adaptive_batch=True,
+                       fixed_bufs=True, passthrough=True,
+                       durability="passthru-flush")
+    return make_engine(cfg, n_tuples=n_tuples,
+                       spec=NVMeSpec(**ENTERPRISE))
+
+
+def _state(engine, n_keys):
+    """Full logical state, read through the engine's own txn path."""
+    out = {}
+
+    def fiber():
+        for k in range(n_keys):
+            t = engine.begin()
+            v = yield from t.lookup(k)
+            out[k] = v
+            yield from engine.commit(t)
+
+    engine.sched.spawn(fiber(), name="state-read")
+    engine.sched.run()
+    return out
+
+
+def run(n_txns: int = 1_200, duration_s: float = 0.12,
+        n_tuples: int = 4_000, n_workers: int = 64):
+    section("B-tree vs LSM on one YCSB stream (lsm/ycsb)")
+    for mix in MIXES:
+        states = {}
+        for name, mk in (("btree", _btree), ("lsm", _lsm)):
+            e = mk(n_tuples, n_fibers=1)     # 1 fiber => same commit
+            w = YCSB(e, mix, seed=11)        # order on both engines
+            res = e.run_fibers(w.txn, n_txns)
+            base = f"lsm/ycsb/mix={mix}/engine={name}"
+            emit(f"{base}/tps", round(res["tps"]),
+                 f"reads={w.reads} writes={w.writes}")
+            if name == "lsm":
+                emit(f"{base}/write_amp", round(res["write_amp"], 3),
+                     f"flushed={res['flushed_mb']:.2f}MB "
+                     f"compacted={res['compacted_mb']:.2f}MB")
+                emit(f"{base}/read_amp", round(res["read_amp"], 3),
+                     f"bloom_skips={res['bloom_skips']}")
+                emit(f"{base}/space_amp", round(res["space_amp"], 3),
+                     f"tables={res['n_tables']}")
+            states[name] = _state(e, n_tuples)
+        equal = int(states["btree"] == states["lsm"])
+        emit(f"lsm/ycsb/mix={mix}/equal_state", equal,
+             f"{n_tuples} keys compared bit-for-bit")
+        assert equal == 1, f"engine states diverged on YCSB-{mix}"
+
+    section("compaction interference, host vs in-kernel "
+            "(lsm/interference)")
+    p99 = {}
+    kern_engine = None
+    for mode, kernel in (("host", False), ("kernel", True)):
+        for rate in RATES:
+            e = _lsm(n_tuples, kernel=kernel, n_fibers=n_workers)
+            r = slo.run_open_loop(
+                e, lambda rng, e=e: ycsb_update_txn(e, rng),
+                rate_tps=rate, duration_s=duration_s,
+                n_workers=n_workers, seed=7)
+            e.note_debt()
+            rows = e.lsm_result_rows(max(e.tl.now, 1e-12))
+            base = f"lsm/interference/rate={rate}/mode={mode}"
+            note = (f"completed={r['completed']} "
+                    f"dropped={r['dropped']} "
+                    f"flushes={rows['flushes']} "
+                    f"compactions={rows['compactions']}")
+            emit(f"{base}/p99_us", round(r["p99_us"], 1), note)
+            emit(f"{base}/p999_us", round(r["p999_us"], 1))
+            emit(f"{base}/achieved_tps", round(r["achieved_tps"]))
+            emit(f"{base}/debt_mb", round(rows["debt_mean_mb"], 3),
+                 f"max={rows['debt_max_mb']:.3f}MB")
+            p99[(mode, rate)] = r["p99_us"]
+            if kernel and rate == RATES[-1]:
+                kern_engine = e
+    top = RATES[-1]
+    frac = (p99[("host", top)] - p99[("kernel", top)]) \
+        / max(p99[("host", top)], 1e-12)
+    emit("lsm/interference/p99_recovered_frac", round(frac, 4),
+         f"host={p99[('host', top)]:.0f}us "
+         f"kernel={p99[('kernel', top)]:.0f}us at {top}/s")
+
+    section("kernel-compaction attribution (lsm/kernel)")
+    rs = kern_engine.ring.stats
+    assert rs.attribution.get("kernel_compaction", 0.0) > 0.0, \
+        "offload rung never charged a kernel-side merge"
+    emit_attribution("lsm/kernel", dict(rs.attribution),
+                     rs.cpu_seconds_app + rs.cpu_seconds_sqpoll)

@@ -101,6 +101,16 @@ LEAF_SPECS = {
     "degrades":         _m("count", None, False),
     "repromotions":     _m("count", None, False),
     "resets":           _m("count", None, False),
+    # LSM engine (bench_lsm): amplification factors scale with how many
+    # flush/compaction rounds a run completes, so smoke sizes are not
+    # comparable; equal_state must be exactly 1 in EVERY run (check.sh
+    # asserts it) and the interference/debt rows scale with the window
+    "write_amp":          _m("x", False, False),
+    "read_amp":           _m("x", False, False),
+    "space_amp":          _m("x", False, False),
+    "debt_mb":            _m("MB", False, False),
+    "equal_state":        _m("bool", True, False),
+    "p99_recovered_frac": _m("frac", True, False),
     # acked-durability audit: acked txns whose effects are missing
     # after crash+recovery under a fault storm.  MUST be zero — the
     # check.sh fault-smoke step asserts it on every run.

@@ -38,6 +38,7 @@ MODULES = [
     ("serve", "benchmarks.bench_serve"),
     ("roofline", "benchmarks.bench_roofline"),
     ("faults", "benchmarks.bench_faults"),
+    ("lsm", "benchmarks.bench_lsm"),
 ]
 
 #: per-module kwargs for --smoke; modules without an entry are cheap
@@ -63,6 +64,12 @@ SMOKE_KW = {
     # SAME fault rates as the full run (row names must line up and the
     # degrade/fallback assertions must still trip); fewer txns
     "faults": {"n_txns": 96},
+    # SAME offered rates and YCSB mixes as the full run; shorter
+    # open-loop window and fewer closed-loop txns.  The window must
+    # stay long enough for the top rate to force compactions — the
+    # kernel_compaction attribution category has to show up in smoke
+    # (check.sh diffs categories against the committed snapshot).
+    "lsm": {"n_txns": 300, "duration_s": 0.06},
 }
 
 

@@ -100,6 +100,38 @@ assert vals["faults/storm/acked_lost"] == 0, \
 print(f"# faults OK: {sum(inj)} injected in the wal sweep, "
       f"degrades={vals['faults/semisync/degrades']}, "
       f"fallbacks={vals['faults/passthru/fallbacks']}, acked_lost=0")
+
+# ---- LSM engine: interference curve, offload recovery, equivalence
+ref_lsm = {r["name"]: r["value"] for r in ref_rows
+           if r["name"].startswith("lsm/")}
+smoke_lsm = {r["name"]: r["value"] for r in smoke_rows
+             if r["name"].startswith("lsm/")}
+assert ref_lsm, f"no lsm/* rows in {ref}"
+assert smoke_lsm, "no lsm/* rows in the smoke snapshot"
+rates = sorted({int(n.split("rate=")[1].split("/")[0])
+                for n in ref_lsm if "/interference/rate=" in n})
+assert len(rates) >= 3, f"lsm interference sweep too thin: {rates}"
+for vals_, tag in ((ref_lsm, ref), (smoke_lsm, "smoke")):
+    host = [vals_[f"lsm/interference/rate={r}/mode=host/p99_us"]
+            for r in rates]
+    # foreground p99 must degrade with offered rate (compaction debt
+    # grows with it); 0.8 slack absorbs log2 latency quantization
+    for a, b in zip(host, host[1:]):
+        assert b >= 0.8 * a, \
+            f"{tag}: host p99 not monotone in offered rate: {host}"
+    assert host[-1] > 1.5 * host[0], \
+        f"{tag}: no compaction interference visible: {host}"
+frac = ref_lsm["lsm/interference/p99_recovered_frac"]
+assert frac > 0.0, f"+KernelCompaction recovered no p99: {frac}"
+eq = {n: v for n, v in {**ref_lsm, **smoke_lsm}.items()
+      if n.endswith("/equal_state")}
+assert eq and all(v == 1 for v in eq.values()), \
+    f"B-tree/LSM logical-state divergence: {eq}"
+assert any("/attr/kernel_compaction" in r["name"] for r in ref_rows), \
+    f"kernel_compaction attribution missing from {ref}"
+print(f"# lsm OK: host p99 {[round(v) for v in host]}us over {rates}, "
+      f"kernel rung recovers {frac:.0%} at {rates[-1]}/s, "
+      f"equal_state clean on {len(eq)} mixes")
 EOF
 python -m benchmarks.run --smoke --only fig9wal \
     --trace .bench/trace_smoke.json > /dev/null

@@ -37,6 +37,7 @@ DATA_FD = 3        # B-tree data file (repro.storage.engine)
 LOG_FD = 4         # WAL log device (repro.wal)
 KV_HOST_FD = 5     # serving tier: host-DRAM KV spill store
 KV_NVME_FD = 6     # serving tier: NVMe cold tier (raw namespace)
+LSM_FD = 7         # LSM SSTable store (repro.lsm)
 
 
 def host_dram_spec() -> "NVMeSpec":

@@ -38,6 +38,9 @@ CATEGORIES = (
     "sock_speculative", # wasted speculative inline recv attempt
     "zc_setup",         # zero-copy / fixed-buffer registration per op
     "sqpoll",           # SQPoll thread's submission polling
+    "kernel_compaction",  # +KernelCompaction rung: in-kernel (eBPF-style)
+                          # LSM merge cycles + bounce copies, charged
+                          # kernel-side (no fiber-core occupancy)
 )
 
 
@@ -71,6 +74,10 @@ class CostModel:
     copy_bulk_per_byte: float = 0.0925
     zc_setup: int = 1_500         # zero-copy registration per op
     multishot_amort: int = 1_200  # saved per recv after the first
+    # LSM compaction merge (repro.lsm): decode + compare + re-encode +
+    # CRC per merged entry; charged to the app core (host compaction)
+    # or kernel-side under the +KernelCompaction rung
+    lsm_merge_entry: int = 3_000
     # io_worker fallback (§2.2: +7.3 µs measured)
     worker_overhead_s: float = 7.3e-6
     sqpoll_wake_s: float = 30e-6  # §2.2: waking the SQPoll thread

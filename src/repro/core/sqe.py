@@ -219,6 +219,12 @@ class RingStats:
     error_cqes: int = 0
     short_cqes: int = 0
     passthru_fallbacks: int = 0
+    # LSM read path (repro.lsm): SSTable data pages actually probed per
+    # level ("L0", "L1", ...) — the per-level read-amplification
+    # surface — and lookups a bloom filter answered negatively without
+    # touching the device
+    lsm_level_reads: Dict[str, int] = field(default_factory=dict)
+    lsm_bloom_skips: int = 0
     # kernel-cost attribution (seconds; see class docstring)
     attribution: Dict[str, float] = field(default_factory=dict)
     op_attribution: Dict[str, Dict[str, float]] = field(

@@ -28,6 +28,10 @@ BENCH snapshots show fixing it:
                           decode, no read-ahead
   pager-read-bounce       pin_copy share on a paging    +RegBufs
                           read path (GL4)
+  compaction-debt         host merge CPU on the         +KernelCompaction
+                          foreground core               (or throttle)
+  read-amp-bound          device probes per LSM         compact harder /
+                          lookup > ~4                   wider blooms
 
 ``shared-ring-lock`` carries a structural severity boost: *any*
 measurable ring-lock share means several cores are submitting to one
@@ -72,6 +76,13 @@ class RingReport:
     cqes_reaped: int = 0
     semisync_degrades: int = 0
     repromotions: int = 0
+    # LSM signals (repro.lsm result dicts): all zero/absent on a
+    # non-LSM engine, so the LSM rules stay quiet everywhere else
+    compaction_cpu_frac: float = 0.0   # merge CPU / wall time
+    kernel_compaction: bool = False
+    lsm_lookups: int = 0
+    lsm_read_amp: float = 0.0          # device probes per lookup
+    lsm_debt_max_mb: float = 0.0
 
     def share(self, cat: str) -> float:
         total = sum(self.attribution.values())
@@ -138,7 +149,12 @@ def report_from_result(res: dict) -> RingReport:
                             int(res.get("batch_eff", 0.0) *
                                 res.get("enters", 0))),
         semisync_degrades=res.get("semisync_degrades", 0),
-        repromotions=res.get("repromotions", 0))
+        repromotions=res.get("repromotions", 0),
+        compaction_cpu_frac=res.get("compaction_cpu_frac", 0.0),
+        kernel_compaction=res.get("kernel_compaction", False),
+        lsm_lookups=res.get("lookups", 0),
+        lsm_read_amp=res.get("read_amp", 0.0),
+        lsm_debt_max_mb=res.get("debt_max_mb", 0.0))
 
 
 def diagnose(rep: RingReport) -> List[Finding]:
@@ -255,6 +271,31 @@ def diagnose(rep: RingReport) -> List[Finding]:
             f"({err_rate:.1%}) completed with a device/link error: "
             f"the device or link is degraded — retries mask it at a "
             f"latency cost, so investigate before raising budgets"))
+
+    # ----------------------------------------------- LSM rules (PR 10)
+    if rep.compaction_cpu_frac > 0.05 and not rep.kernel_compaction:
+        s = rep.compaction_cpu_frac
+        out.append(Finding(
+            "compaction-debt", "+KernelCompaction (or throttle writes)",
+            "§4.3 background work shares the foreground's core: "
+            "offload or pace it", s,
+            f"host-side compaction merges burn {s:.0%} of wall-clock "
+            f"CPU on the foreground core (peak debt "
+            f"{rep.lsm_debt_max_mb:.1f} MB): every merge slice lands "
+            f"in the OLTP tail — offload the merge kernel-side or "
+            f"throttle the write rate"))
+
+    if rep.lsm_lookups > 0 and rep.lsm_read_amp > 4.0:
+        s = min(1.0, rep.lsm_read_amp / 10.0)
+        out.append(Finding(
+            "read-amp-bound", "compact harder / widen bloom filters",
+            "bound per-lookup device probes: bloom bits + leveling "
+            "keep read-amp O(1)", s,
+            f"lookups probe {rep.lsm_read_amp:.1f} data pages each "
+            f"(over {rep.lsm_lookups} lookups): L0 is too deep or the "
+            f"bloom filters pass too many tables — lower the L0 "
+            f"trigger, raise bloom bits/key, or give compaction more "
+            f"headroom"))
 
     if rep.semisync_degrades > 0:
         back = (f"re-promoted {rep.repromotions}x"

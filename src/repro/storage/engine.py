@@ -129,6 +129,17 @@ class EngineConfig:
     # seeded RNG, consumed in sim event order) is attached to the data
     # and log devices (and, by ReplicatedCluster, to the link sockets).
     faults: Optional[FaultSpec] = None
+    # storage-engine selector (repro.lsm): "btree" keeps every rung on
+    # the exact code path above — none of the knobs below are read by
+    # StorageEngine, so existing configs stay bit-for-bit unchanged.
+    # "lsm" builds an LSMEngine via ``make_engine``
+    engine: str = "btree"
+    memtable_bytes: int = 64 * 1024      # rotation threshold
+    sstable_bytes: int = 256 * 1024      # max data bytes per table
+    l0_trigger: int = 4                  # L0 tables before compaction
+    level_fanout: int = 4                # per-level capacity ratio
+    bloom_bits_per_key: int = 10
+    kernel_compaction: bool = False      # the +KernelCompaction rung
 
     @staticmethod
     def ladder():
@@ -185,6 +196,25 @@ class EngineConfig:
             EngineConfig.multicore(4, shared_ring=True),
             EngineConfig.multicore(4),
         ]
+
+    @classmethod
+    def lsm(cls, *, kernel_compaction: bool = False,
+            **kw) -> "EngineConfig":
+        """The LSM rungs (repro.lsm): ``lsm`` — ring-native LSM engine
+        with host-side background compaction — and
+        ``lsm+KernelCompaction``, the in-kernel (eBPF-style) offload
+        rung where merge CPU leaves the foreground core.  Defaults to
+        the passthrough flush path: SSTable barriers are ~5 µs NVMe
+        flush commands instead of 1 ms worker-path fsyncs, which is
+        what a log-structured engine on a PLP device would run."""
+        name = "lsm+KernelCompaction" if kernel_compaction else "lsm"
+        kw.setdefault("n_fibers", 128)
+        kw.setdefault("adaptive_batch", True)
+        kw.setdefault("fixed_bufs", True)
+        kw.setdefault("passthrough", True)
+        kw.setdefault("durability", "passthru-flush")
+        return cls(name, engine="lsm",
+                   kernel_compaction=kernel_compaction, **kw)
 
     @classmethod
     def multicore(cls, n_cores: int, *, shared_ring: bool = False,
@@ -807,3 +837,17 @@ def _kv_bytes(key: int, value: bytes) -> bytes:
     """The <qH>key,vlen + value payload shared with the intent records
     (see repro.wal.log.decode_kv)."""
     return _struct.pack("<qH", key, len(value)) + value
+
+
+def make_engine(cfg: EngineConfig, **kw):
+    """Engine factory: dispatch on ``cfg.engine``.  Both engines share
+    the transaction surface (begin / Txn.update / Txn.lookup / commit,
+    ``run_fibers``, the SLO harness's service-fiber hooks), so
+    workloads written against one run unchanged on the other.  The
+    import is lazy: a B-tree config never touches repro.lsm."""
+    if cfg.engine == "btree":
+        return StorageEngine(cfg, **kw)
+    if cfg.engine == "lsm":
+        from repro.lsm.engine import LSMEngine
+        return LSMEngine(cfg, **kw)
+    raise ValueError(f"unknown engine {cfg.engine!r}")

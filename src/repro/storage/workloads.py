@@ -40,6 +40,122 @@ def ycsb_read_txn(engine, rng):
 
 
 # ---------------------------------------------------------------------------
+# YCSB core workloads (zipfian A/B/C/F)
+# ---------------------------------------------------------------------------
+
+class ZipfGen:
+    """Gray et al. zipfian key picker over ``[0, n)``: the standard
+    YCSB skew (theta 0.99), computed with the closed-form zeta
+    approximation so construction is O(1) in ``n``.  Deterministic
+    given (n, seed): the generator owns its RNG."""
+
+    THETA = 0.99
+
+    def __init__(self, n: int, rng: np.random.Generator):
+        self.n = n
+        self.rng = rng
+        th = self.THETA
+        self.zetan = self._zeta(n, th)
+        self.zeta2 = self._zeta(2, th)
+        self.alpha = 1.0 / (1.0 - th)
+        self.eta = ((1.0 - (2.0 / n) ** (1.0 - th)) /
+                    (1.0 - self.zeta2 / self.zetan))
+
+    @staticmethod
+    def _zeta(n: int, theta: float) -> float:
+        # exact for small n; Euler–Maclaurin tail for large n keeps
+        # construction O(1) (YCSB itself caches, we approximate)
+        cut = min(n, 10_000)
+        s = float(np.sum(1.0 / np.arange(1, cut + 1) ** theta))
+        if n > cut:
+            s += ((n ** (1.0 - theta) - cut ** (1.0 - theta)) /
+                  (1.0 - theta))
+        return s
+
+    def next(self) -> int:
+        u = self.rng.random()
+        uz = u * self.zetan
+        if uz < 1.0:
+            return 0
+        if uz < 1.0 + 0.5 ** self.THETA:
+            return 1
+        return int(self.n * (self.eta * u - self.eta + 1.0) ** self.alpha)
+
+
+#: YCSB core mixes: (read fraction, rmw fraction); the rest is a blind
+#: update.  F's writes are read-modify-write of the same key.
+YCSB_MIXES = {
+    "A": (0.50, 0.0),        # 50% read / 50% update
+    "B": (0.95, 0.0),        # 95% read /  5% update
+    "C": (1.00, 0.0),        # read-only
+    "F": (0.50, 0.50),       # 50% read / 50% read-modify-write
+}
+
+
+class YCSB:
+    """Seeded, engine-independent YCSB op stream.
+
+    The generator owns its RNG and an op counter, so two engines built
+    over the same ``(n, mix, seed)`` observe the SAME key/op sequence
+    op-for-op — the B-tree-vs-LSM state-equivalence tests and the
+    fairness of the cross-engine benchmark both hang on this.  Values
+    are derived from (key, op index), making every write distinct and
+    the final state a fingerprint of which writer won each key.
+
+    Works against any engine exposing ``begin``/``commit`` and a Txn
+    with ``lookup``/``update`` (both ``StorageEngine`` and
+    ``LSMEngine`` do)."""
+
+    def __init__(self, engine, mix: str = "A", *, seed: int = 7,
+                 zipfian: bool = True):
+        assert mix in YCSB_MIXES, f"unknown YCSB mix {mix!r}"
+        assert engine.cfg.value_size >= 32, "value too small for stamps"
+        self.e = engine
+        self.mix = mix
+        self.read_frac, self.rmw_frac = YCSB_MIXES[mix]
+        self.rng = np.random.default_rng(seed)
+        self.zipf = ZipfGen(engine.n_tuples, self.rng) if zipfian \
+            else None
+        self.ops = 0
+        self.reads = 0
+        self.writes = 0
+
+    def _key(self) -> int:
+        if self.zipf is not None:
+            return self.zipf.next()
+        return int(self.rng.integers(0, self.e.n_tuples))
+
+    def _val(self, key: int, op: int) -> bytes:
+        stamp = b"%16d%16d" % (key, op)
+        return stamp + bytes(self.e.cfg.value_size - len(stamp))
+
+    def txn(self, rng=None):
+        """One YCSB operation as a transaction fiber.  ``rng`` is
+        ignored — the stream must not depend on which engine's
+        run-loop RNG is passed in."""
+        e = self.e
+        op = self.ops
+        self.ops += 1
+        r = self.rng.random()
+        key = self._key()
+        e.charge(C_TX_S)
+        t = e.begin()
+        if r < self.read_frac:
+            self.reads += 1
+            v = yield from t.lookup(key)
+            assert v is not None, f"missing key {key}"
+            yield from e.commit(t)
+            return
+        self.writes += 1
+        if r < self.read_frac + self.rmw_frac:
+            v = yield from t.lookup(key)     # read-modify-write (F)
+            assert v is not None, f"missing key {key}"
+        ok = yield from t.update(key, self._val(key, op))
+        assert ok
+        yield from e.commit(t)
+
+
+# ---------------------------------------------------------------------------
 # TPC-C-lite
 # ---------------------------------------------------------------------------
 

@@ -60,9 +60,12 @@ class RecordType:
     APPLY = 6        # one applied tree op: page deltas / images + meta
     APPLY_END = 7    # all of the txn's APPLY records are in the log
     CHECKPOINT = 8   # fuzzy checkpoint: root/next_pid + dirty-page table
+    LSM_FLUSH = 9    # LSM manifest delta: one memtable flushed to L0
+    LSM_COMPACT = 10  # LSM manifest delta: tables merged to level+1
 
     _NAMES = {1: "BEGIN", 2: "UPDATE", 3: "INSERT", 4: "COMMIT",
-              5: "ABORT", 6: "APPLY", 7: "APPLY_END", 8: "CHECKPOINT"}
+              5: "ABORT", 6: "APPLY", 7: "APPLY_END", 8: "CHECKPOINT",
+              9: "LSM_FLUSH", 10: "LSM_COMPACT"}
 
     @classmethod
     def name(cls, t: int) -> str:

@@ -1,0 +1,366 @@
+"""LSM engine on the ring runtime (PR 10).
+
+Pins the tentpole contracts: the engine's basic operation (memtable →
+flush → leveled compaction, all through the ring), B-tree-vs-LSM
+logical-state equivalence on one seeded YCSB stream, crash recovery
+(memtable replay after a crash mid-flush; zero acked-write loss across
+a crash during compaction; orphaned and torn SSTables ignored), the
++KernelCompaction attribution category with CPU conservation, and the
+two advisor rules (compaction-debt, read-amp-bound) firing and
+clearing end to end.
+"""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import NVMeSpec
+from repro.lsm import recover_lsm
+from repro.lsm.sstable import build_table_pages, open_from_image
+from repro.observe.advisor import (RingReport, diagnose,
+                                   report_from_result)
+from repro.storage.engine import EngineConfig, make_engine
+from repro.storage.workloads import YCSB, ZipfGen
+
+ENTERPRISE = dict(plp=True, fsync_lat=30e-6)
+
+
+def lsm_engine(n_tuples=4_000, *, kernel=False, n_fibers=32, seed=0,
+               **kw):
+    cfg = EngineConfig.lsm(kernel_compaction=kernel, n_fibers=n_fibers,
+                           pool_frames=256, **kw)
+    return make_engine(cfg, n_tuples=n_tuples, seed=seed,
+                       spec=NVMeSpec(**ENTERPRISE))
+
+
+def update_txn(e, rng):
+    key = int(rng.integers(0, e.n_tuples))
+    val = struct.pack("<q", key) + bytes(e.cfg.value_size - 8)
+    e.charge(1e-6)
+    t = e.begin()
+    yield from t.update(key, val)
+    yield from e.commit(t)
+
+
+def _tracked_fiber(e, fid, keys_per_fiber=200):
+    """Disjoint-key writer recording last-acked and all-staged values
+    (the unacked-but-durable overwrite exception, same as the B-tree
+    fault tests)."""
+    acked, expect, staged = [], {}, {}
+
+    def fiber():
+        rng = np.random.default_rng(1000 + fid)
+        lo = fid * keys_per_fiber
+        while True:
+            t = e.begin()
+            key = lo + int(rng.integers(0, keys_per_fiber))
+            val = struct.pack("<qq", t.id, key)
+            val += bytes(e.cfg.value_size - len(val))
+            yield from t.update(key, val)
+            staged[t.id] = (key, val)
+            yield from e.commit(t)
+            acked.append(t.id)
+            expect[key] = val
+
+    return fiber, acked, expect, staged
+
+
+def _run_tracked_until(e, n_fibers, until):
+    per = []
+    workers = []
+    for fid in range(n_fibers):
+        fiber, acked, expect, staged = _tracked_fiber(e, fid)
+        per.append((acked, expect, staged))
+        workers.append(e.sched.spawn(fiber()))
+    e.spawn_service_fibers(workers, done=lambda: False)
+    e.sched.run(until=until)
+    acked = [t for a, _, _ in per for t in a]
+    expect = {k: v for _, ex, _ in per for k, v in ex.items()}
+    staged = {t: kv for _, _, st in per for t, kv in st.items()}
+    return acked, expect, staged
+
+
+def _assert_recovered_state(e, expect, staged):
+    data, log = e.crash_images()
+    rec = recover_lsm(log, data)
+    for key, val in expect.items():
+        v = rec.get(key)
+        assert v is not None, f"acked write to key {key} lost"
+        if v == val:
+            continue
+        # the only legal difference: a LATER txn's COMMIT went durable
+        # without its ack resuming before the crash
+        w = struct.unpack_from("<q", v)[0]
+        last = struct.unpack_from("<q", val)[0]
+        assert w > last and staged.get(w) == (key, v), \
+            f"acked write to key {key} lost (found writer {w})"
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# engine basics
+# ---------------------------------------------------------------------------
+
+def test_lsm_engine_flushes_and_compacts():
+    e = lsm_engine()
+    res = e.run_fibers(lambda rng: update_txn(e, rng), 3_000)
+    assert res["txns"] == 3_000
+    assert res["flushes"] > 0, "memtable never rotated"
+    assert res["compactions"] > 0, "L0 never compacted"
+    assert res["write_amp"] >= 1.0
+    assert res["space_amp"] >= 1.0
+    assert res["commits"] == res["txns"]
+    # attribution conservation across the LSM surface
+    gap = abs(sum(res["attribution"].values()) -
+              (res["app_cpu_s"] + res["sqpoll_cpu_s"]))
+    assert gap < 1e-9
+
+
+def test_lsm_lookup_serves_all_tiers():
+    """After enough writes to flush and compact, every key — memtable-
+    resident, L0, or bulk-loaded bottom level — reads back correctly."""
+    e = lsm_engine()
+    e.run_fibers(lambda rng: update_txn(e, rng), 2_000)
+    got = {}
+
+    def verify():
+        for key in range(0, e.n_tuples, 7):
+            t = e.begin()
+            v = yield from t.lookup(key)
+            got[key] = v
+            yield from e.commit(t)
+
+    e.sched.spawn(verify(), name="verify")
+    e.sched.run()
+    for key, v in got.items():
+        assert v is not None and len(v) == e.cfg.value_size
+    # the read path actually touched the device tiers and counted them
+    st = e.ring.stats
+    assert sum(st.lsm_level_reads.values()) > 0
+    res_rows = e.lsm_result_rows(1.0)
+    assert res_rows["read_amp"] > 0
+
+
+def test_kernel_compaction_attribution_and_conservation():
+    """+KernelCompaction: merge CPU lands kernel-side under its own
+    category, conservation holds, and the foreground runs faster than
+    the host-merge twin on the same workload."""
+    host = lsm_engine(seed=0)
+    kern = lsm_engine(seed=0, kernel=True)
+    rh = host.run_fibers(lambda rng: update_txn(host, rng), 3_000)
+    rk = kern.run_fibers(lambda rng: update_txn(kern, rng), 3_000)
+    assert rh["compactions"] > 0 and rk["compactions"] > 0
+    assert "kernel_compaction" not in rh["attribution"]
+    assert rk["attribution"]["kernel_compaction"] > 0
+    assert rk["sqpoll_cpu_s"] > 0
+    for r in (rh, rk):
+        gap = abs(sum(r["attribution"].values()) -
+                  (r["app_cpu_s"] + r["sqpoll_cpu_s"]))
+        assert gap < 1e-9
+    assert rk["tps"] > rh["tps"], \
+        "offloading merge CPU should speed up the foreground"
+
+
+# ---------------------------------------------------------------------------
+# YCSB stream + cross-engine equivalence (satellite)
+# ---------------------------------------------------------------------------
+
+def test_zipf_deterministic_and_skewed():
+    g1 = ZipfGen(10_000, np.random.default_rng(3))
+    g2 = ZipfGen(10_000, np.random.default_rng(3))
+    ks1 = [g1.next() for _ in range(5_000)]
+    ks2 = [g2.next() for _ in range(5_000)]
+    assert ks1 == ks2
+    assert all(0 <= k < 10_000 for k in ks1)
+    # zipfian: the hottest 1% of keys draw far more than 1% of accesses
+    hot = sum(1 for k in ks1 if k < 100)
+    assert hot > len(ks1) * 0.2
+
+
+def _read_state(e, keys):
+    out = {}
+
+    def fiber():
+        for k in keys:
+            t = e.begin()
+            v = yield from t.lookup(k)
+            out[k] = v
+            yield from e.commit(t)
+
+    e.sched.spawn(fiber(), name="state-read")
+    e.sched.run()
+    return out
+
+
+@pytest.mark.parametrize("mix", ["A", "B", "F"])
+def test_btree_lsm_equivalence_on_ycsb(mix):
+    """Same seeded YCSB stream, single worker fiber (identical commit
+    order) => bit-identical logical state on both engines."""
+    n = 2_000
+    bt_cfg = EngineConfig("+PassthruFlush", n_fibers=1,
+                          adaptive_batch=True, fixed_bufs=True,
+                          passthrough=True,
+                          durability="passthru-flush", pool_frames=256)
+    ls_cfg = EngineConfig.lsm(n_fibers=1, pool_frames=256)
+    e_bt = make_engine(bt_cfg, n_tuples=n, spec=NVMeSpec(**ENTERPRISE))
+    e_ls = make_engine(ls_cfg, n_tuples=n, spec=NVMeSpec(**ENTERPRISE))
+    w_bt = YCSB(e_bt, mix, seed=11)
+    w_ls = YCSB(e_ls, mix, seed=11)
+    e_bt.run_fibers(w_bt.txn, 600)
+    e_ls.run_fibers(w_ls.txn, 600)
+    # the op streams themselves are engine-independent
+    assert (w_bt.reads, w_bt.writes) == (w_ls.reads, w_ls.writes)
+    keys = list(range(n))
+    s_bt = _read_state(e_bt, keys)
+    s_ls = _read_state(e_ls, keys)
+    assert s_bt == s_ls
+
+
+# ---------------------------------------------------------------------------
+# crash recovery (satellite)
+# ---------------------------------------------------------------------------
+
+def test_memtable_replay_after_crash_mid_flush():
+    """Crash while SSTable chunks are mid-write and the manifest record
+    is NOT yet durable: the half-written table is an orphan; every
+    acked write replays from the WAL."""
+    e = lsm_engine()
+    tio = e.table_io
+    crashed = {"hit": False}
+
+    def mid_flush():
+        # some flush chunks written, flush not yet recorded
+        if tio.chunks_written > 0 and e.flushes == 0:
+            crashed["hit"] = True
+            return True
+        return e.tl.now > 50e-3
+    acked, expect, staged = _run_tracked_until(e, 16, mid_flush)
+    assert crashed["hit"], "run never reached a mid-flush point"
+    assert acked, "nothing acked before the crash"
+    rec = _assert_recovered_state(e, expect, staged)
+    # nothing was flushed-and-recorded: replay must cover everything
+    assert rec.replayed_txns > 0
+
+
+def test_no_acked_loss_across_crash_during_compaction():
+    """Run long enough that compactions are in flight, crash at three
+    different points, and recover: every acked write survives."""
+    for stop_ms in (3.0, 6.0, 12.0):
+        e = lsm_engine()
+        until = lambda: (e.compactor.jobs >= 1 and
+                         e.tl.now >= stop_ms * 1e-3)
+        acked, expect, staged = _run_tracked_until(e, 16, until)
+        assert acked
+        assert e.flushes > 0
+        _assert_recovered_state(e, expect, staged)
+
+
+def test_torn_sstable_rejected_and_replayed_around():
+    """Corrupt a referenced L0 table in the crash image: recovery must
+    CRC-reject it, clamp the replay horizon below its flush, and still
+    serve every acked write (from the WAL replay)."""
+    e = lsm_engine()
+    acked, expect, staged = _run_tracked_until(
+        e, 16, lambda: e.flushes >= 2)
+    assert e.flushes >= 2
+    data, log = e.crash_images()
+    clean = recover_lsm(log, data)
+    victim = clean.levels[0][0]          # newest flushed table
+    data = bytearray(data)
+    off = victim.base_pid * e.cfg.page_size
+    data[off:off + 64] = b"\xde" * 64    # tear the first data page
+    rec = recover_lsm(log, bytes(data))
+    assert rec.n_tables() == clean.n_tables() - 1
+    assert rec.horizon <= clean.horizon
+    assert rec.replayed_txns >= clean.replayed_txns
+    for key, val in expect.items():
+        v = rec.get(key)
+        assert v is not None, f"acked key {key} lost with torn table"
+
+
+def test_orphaned_half_written_table_ignored():
+    """A table written to the data image WITHOUT a manifest record
+    (crash before the LSM_FLUSH append) is invisible to recovery."""
+    e = lsm_engine()
+    acked, expect, staged = _run_tracked_until(
+        e, 8, lambda: e.flushes >= 1)
+    data, log = e.crash_images()
+    before = recover_lsm(log, data)
+    # forge an orphan: valid CRC-footed table bytes at an unreferenced
+    # page range past the allocator's high-water mark
+    pages, t = build_table_pages(
+        [(1, b"\x01" * 16), (2, b"\x02" * 16)],
+        page_size=e.cfg.page_size, table_id=999_999, seq=999, level=0)
+    base = e.next_pid + 8
+    blob = b"".join(pages)
+    data = bytearray(data)
+    data[base * e.cfg.page_size:base * e.cfg.page_size + len(blob)] = blob
+    # the bytes ARE a valid table...
+    assert open_from_image(bytes(data), base, t.n_pages,
+                           e.cfg.page_size) is not None
+    # ...but recovery never references them
+    after = recover_lsm(log, bytes(data))
+    assert after.n_tables() == before.n_tables()
+    assert after.get(1) == before.get(1)  # not b"\x01"*16
+
+
+# ---------------------------------------------------------------------------
+# advisor rules (satellite): fire and clear, end to end
+# ---------------------------------------------------------------------------
+
+def test_advisor_compaction_debt_fires_and_clears():
+    host = lsm_engine(seed=0)
+    rh = host.run_fibers(lambda rng: update_txn(host, rng), 3_000)
+    assert rh["compaction_cpu_frac"] > 0.05, \
+        "workload too light to exercise the rule"
+    rules = {f.rule for f in diagnose(report_from_result(rh))}
+    assert "compaction-debt" in rules
+    # the fix rung clears it: same workload, merges offloaded
+    kern = lsm_engine(seed=0, kernel=True)
+    rk = kern.run_fibers(lambda rng: update_txn(kern, rng), 3_000)
+    rules_k = {f.rule for f in diagnose(report_from_result(rk))}
+    assert "compaction-debt" not in rules_k
+
+
+def test_advisor_read_amp_bound_fires_and_clears():
+    """Degrade the read path structurally (deep L0: huge trigger, no
+    compaction headroom, 1-bit blooms) => the rule fires; the default
+    config on the same workload stays quiet."""
+    bad = lsm_engine(memtable_bytes=8 * 1024, l0_trigger=1_000,
+                     bloom_bits_per_key=1, n_fibers=8)
+    bad.run_fibers(lambda rng: update_txn(bad, rng), 1_500)
+    res_w = bad.run_fibers(
+        lambda rng: _lookup_txn(bad, rng), 500)
+    assert res_w["read_amp"] > 4.0, \
+        f"degraded config read_amp {res_w['read_amp']}"
+    rules = {f.rule for f in diagnose(report_from_result(res_w))}
+    assert "read-amp-bound" in rules
+
+    good = lsm_engine(n_fibers=8)
+    good.run_fibers(lambda rng: update_txn(good, rng), 1_500)
+    res_g = good.run_fibers(lambda rng: _lookup_txn(good, rng), 500)
+    assert res_g["read_amp"] <= 4.0
+    rules_g = {f.rule for f in diagnose(report_from_result(res_g))}
+    assert "read-amp-bound" not in rules_g
+
+
+def _lookup_txn(e, rng):
+    key = int(rng.integers(0, e.n_tuples))
+    e.charge(1e-6)
+    t = e.begin()
+    v = yield from t.lookup(key)
+    assert v is not None
+    yield from e.commit(t)
+
+
+def test_advisor_report_fields_roundtrip():
+    rep = RingReport(compaction_cpu_frac=0.2, lsm_lookups=100,
+                     lsm_read_amp=6.0, lsm_debt_max_mb=3.0)
+    rules = {f.rule for f in diagnose(rep)}
+    assert {"compaction-debt", "read-amp-bound"} <= rules
+    quiet = RingReport(compaction_cpu_frac=0.2, kernel_compaction=True,
+                       lsm_lookups=100, lsm_read_amp=1.0)
+    rules_q = {f.rule for f in diagnose(quiet)}
+    assert "compaction-debt" not in rules_q
+    assert "read-amp-bound" not in rules_q
